@@ -1,0 +1,37 @@
+"""Checkpoint data-path kernel benchmarks: throughput of checksum /
+quantize / delta on the host write path (numpy twins, which production
+uses on CPU hosts) and correctness-mode (interpret) Pallas dispatch."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args)
+    return (time.perf_counter() - t0) / reps
+
+
+def kernel_throughput(mb: int = 16) -> List[str]:
+    from repro.kernels.checksum.ref import checksum_np
+    from repro.kernels.delta.ref import delta_np
+    from repro.kernels.quantize.ref import quantize_np
+
+    rows = []
+    x = np.random.RandomState(0).randn(mb << 18).astype(np.float32)  # mb MiB
+    y = x + 1.0
+    nbytes = x.nbytes
+    for name, fn, args in (
+        ("checksum_np", checksum_np, (x,)),
+        ("quantize_np", quantize_np, (x,)),
+        ("delta_np", delta_np, (x, y)),
+    ):
+        s = _time(fn, *args)
+        rows.append(f"kernel_{name}_{mb}MiB,{1e6 * s:.0f},"
+                    f"GBps={nbytes / s / 1e9:.2f}")
+    return rows

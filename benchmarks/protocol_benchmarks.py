@@ -1,0 +1,134 @@
+"""Protocol benchmarks reproducing the paper's tables/figures on the
+simulated fabric (CSV rows; collected by benchmarks.run).
+
+  fig2_interposition_overhead — GROMACS-profile runtime, native vs under
+      MANA (hybrid), vs rank count.  Paper Fig 2: ratio near 1 is good.
+  table2_2pc_variants — VASP-profile runtime: native / mana1
+      (barrier-before-every-collective) / hybrid.  Paper Table II.
+  fig3_ckpt_restart — checkpoint + restart wall time and image size vs
+      model size (+ compressed variants).  Paper Fig 3.
+  fig4_collective_rates — collectives/sec/process vs rank count.
+  drain_scaling — §III-B alltoall drain vs MANA-1 centralized drain.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import List
+
+from benchmarks.workloads import run_simulated_job
+
+
+def fig2_interposition_overhead(ranks=(4, 8, 16), steps=120) -> List[str]:
+    rows = []
+    for n in ranks:
+        nat = run_simulated_job(n, steps, "gromacs", mode=None)
+        mana = run_simulated_job(n, steps, "gromacs", mode="hybrid")
+        ratio = mana["us_per_step"] / nat["us_per_step"]
+        rows.append(f"fig2_gromacs_native_n{n},{nat['us_per_step']:.1f},")
+        rows.append(f"fig2_gromacs_mana_n{n},{mana['us_per_step']:.1f},"
+                    f"ratio={ratio:.3f}")
+    return rows
+
+
+def table2_2pc_variants(n=8, steps=60) -> List[str]:
+    rows = []
+    out = {}
+    for mode in (None, "mana1", "hybrid"):
+        label = mode or "native"
+        r = run_simulated_job(n, steps, "vasp", mode=mode)
+        out[label] = r["us_per_step"]
+        rows.append(f"table2_vasp_{label}_n{n},{r['us_per_step']:.1f},")
+    rows.append(
+        f"table2_summary,,"
+        f"mana1/native={out['mana1'] / out['native']:.2f};"
+        f"hybrid/native={out['hybrid'] / out['native']:.2f}")
+    return rows
+
+
+def fig3_ckpt_restart() -> List[str]:
+    import jax
+    from repro.configs import ARCHS, reduced_config
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.core.checkpoint import CheckpointManager
+    from repro.training.step import init_train_state
+
+    rows = []
+    shape = ShapeConfig("bench", 64, 2, "train")
+    sizes = {"small": dict(n_layers=2, d_model=64),
+             "medium": dict(n_layers=4, d_model=128),
+             "large": dict(n_layers=8, d_model=256)}
+    for name, over in sizes.items():
+        cfg = reduced_config(ARCHS["qwen2-0.5b"], **over)
+        rc = RunConfig(model=cfg, shape=shape)
+        state = init_train_state(cfg, rc, jax.random.PRNGKey(0))
+        for variant, kw in (("raw", {}),
+                            ("quant", {"quantize_keys": ("opt/m", "opt/v")})):
+            d = tempfile.mkdtemp()
+            try:
+                mgr = CheckpointManager(d, **kw)
+                stats = mgr.save(1, state)
+                t0 = time.perf_counter()
+                mgr.restore(1)
+                restore_s = time.perf_counter() - t0
+                rows.append(
+                    f"fig3_ckpt_{name}_{variant},"
+                    f"{1e6 * stats['write_s']:.0f},"
+                    f"bytes={stats['bytes']};snapshot_us="
+                    f"{1e6 * stats['snapshot_s']:.0f};restore_us="
+                    f"{1e6 * restore_s:.0f}")
+            finally:
+                shutil.rmtree(d, ignore_errors=True)
+    return rows
+
+
+def fig4_collective_rates(ranks=(4, 8, 16), steps=60) -> List[str]:
+    rows = []
+    for n in ranks:
+        r = run_simulated_job(n, steps, "vasp", mode="hybrid")
+        per_sec = r["collectives_per_rank"] / r["elapsed_s"]
+        rows.append(f"fig4_collectives_per_s_n{n},{r['us_per_step']:.1f},"
+                    f"rate={per_sec:.0f}")
+    return rows
+
+
+def drain_scaling(ranks=(4, 8, 16, 32)) -> List[str]:
+    import threading
+
+    from repro.comm.fabric import Fabric
+    from repro.core.drain import centralized_drain, drain_rank
+    from repro.core.virtual import comm_gid
+
+    rows = []
+    for n in ranks:
+        # identical traffic for both algorithms
+        def traffic(fab):
+            for r in range(n):
+                fab.endpoints[r].send((r + 1) % n, b"m" * 64)
+                fab.endpoints[r].send((r + 2) % n, b"m" * 32)
+
+        fab = Fabric(n)
+        traffic(fab)
+        world = list(range(n))
+        gid = comm_gid(tuple(world))
+        t0 = time.perf_counter()
+        threads = [threading.Thread(
+            target=lambda r=r: drain_rank(fab.endpoints[r], world, gid=gid))
+            for r in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        alltoall_s = time.perf_counter() - t0
+
+        fab2 = Fabric(n)
+        traffic(fab2)
+        t0 = time.perf_counter()
+        msgs = centralized_drain(fab2.endpoints)
+        central_s = time.perf_counter() - t0
+        rows.append(f"drain_alltoall_n{n},{1e6 * alltoall_s:.0f},"
+                    f"coordinator_msgs=0")
+        rows.append(f"drain_centralized_n{n},{1e6 * central_s:.0f},"
+                    f"coordinator_msgs={msgs}")
+    return rows

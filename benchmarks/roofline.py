@@ -1,0 +1,129 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh)
+cell from the dry-run's compiled artifacts (dryrun_baseline.json).
+
+Hardware model (TPU v5e target):
+  PEAK    = 197e12 FLOP/s bf16 per chip
+  HBM_BW  = 819e9  B/s per chip          (HBM capacity 16 GiB)
+  LINK_BW = 50e9   B/s per ICI link
+
+Sources and conventions:
+  * dot_flops / fusion_io_bytes / collective_bytes come from the
+    trip-count-aware HLO analyzer (launch/hlo_analysis.py) — XLA's
+    cost_analysis() counts While bodies ONCE and therefore undercounts
+    scanned models; both raw and corrected numbers are recorded.
+  * the partitioned module is the per-device program, so all three
+    quantities are PER DEVICE:  term_seconds = quantity / unit_rate.
+    (This matches the spec's global formulation: global = per-device x
+    chips, then / (chips x rate).)
+  * fusion-IO bytes count each fusion's operands + results — an HBM
+    traffic proxy (XLA fusions are the HBM round-trip units); it
+    double-counts producer->consumer hand-offs that stay resident, so
+    the memory term is an upper bound.
+  * MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params,
+    D = global tokens processed; ratio MODEL/HLO exposes remat recompute,
+    TP padding waste, masked-attention waste and MoE dispatch overhead.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_CAP = 16 * (1 << 30)
+
+KIND = {"train_4k": "train", "prefill_32k": "prefill",
+        "decode_32k": "decode", "long_500k": "decode"}
+TOKENS = {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def analyze_cell(cell: Dict) -> Optional[Dict]:
+    if cell.get("status") != "ok":
+        return None
+    chips = 512 if cell["mesh"] == "2x16x16" else 256
+    hlo = cell["hlo"]
+    compute_s = hlo["dot_flops"] / PEAK
+    memory_s = hlo["fusion_io_bytes"] / HBM_BW
+    collective_s = hlo["collective_bytes"] / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    kind = KIND[cell["shape"]]
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * cell["params_active"] * TOKENS[cell["shape"]] / chips
+    useful_s = model_flops / PEAK
+    bound_s = max(terms.values())
+    out = {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops": hlo["dot_flops"],
+        "flops_ratio": model_flops / max(hlo["dot_flops"], 1e-9),
+        "roofline_fraction": useful_s / max(bound_s, 1e-12),
+        "peak_bytes": cell["memory"]["peak_bytes"],
+        "fits_hbm": (cell["memory"]["peak_bytes"] or 0) <= HBM_CAP,
+        "collective_count": hlo.get("collective_count", 0),
+    }
+    return out
+
+
+def load(path: str = "dryrun_final.json") -> List[Dict]:
+    for cand in (path, os.path.join(os.path.dirname(__file__), "..", path)):
+        if os.path.exists(cand):
+            return json.load(open(cand))
+    return []
+
+
+def rows(path: str = "dryrun_final.json",
+         mesh: str = "16x16") -> List[str]:
+    out = []
+    for cell in load(path):
+        if cell.get("mesh") != mesh:
+            continue
+        r = analyze_cell(cell)
+        if r is None:
+            continue
+        out.append(
+            f"roofline_{r['arch']}_{r['shape']},"
+            f"{1e6 * max(r['compute_s'], r['memory_s'], r['collective_s']):.0f},"
+            f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"fits_hbm={r['fits_hbm']}")
+    return out
+
+
+def markdown_table(path: str = "dryrun_final.json",
+                   mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant "
+        "| MODEL/HLO flops | roofline frac | peak GiB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    cells = [c for c in load(path) if c.get("mesh") == mesh]
+    cells.sort(key=lambda c: (c["arch"], c["shape"]))
+    for cell in cells:
+        if cell.get("status") == "skip":
+            lines.append(f"| {cell['arch']} | {cell['shape']} | — | — | — | "
+                         f"skip | — | — | — | {cell['reason'][:40]} |")
+            continue
+        r = analyze_cell(cell)
+        if r is None:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{(r['peak_bytes'] or 0) / (1 << 30):.1f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "16x16"
+    path = sys.argv[2] if len(sys.argv) > 2 else "dryrun_final.json"
+    print(markdown_table(path, mesh))

@@ -1,0 +1,34 @@
+"""Benchmark harness: one benchmark per paper table/figure + the
+kernel/data-path throughput and roofline summaries.
+
+Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import kernel_bench, protocol_benchmarks, roofline
+
+    rows = []
+    rows += protocol_benchmarks.fig2_interposition_overhead(
+        ranks=(4, 8) if quick else (4, 8, 16))
+    rows += protocol_benchmarks.table2_2pc_variants(
+        n=4 if quick else 8, steps=30 if quick else 60)
+    rows += protocol_benchmarks.fig3_ckpt_restart()
+    rows += protocol_benchmarks.fig4_collective_rates(
+        ranks=(4, 8) if quick else (4, 8, 16))
+    rows += protocol_benchmarks.drain_scaling(
+        ranks=(4, 8) if quick else (4, 8, 16, 32))
+    rows += kernel_bench.kernel_throughput(mb=4 if quick else 16)
+    rows += roofline.rows()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

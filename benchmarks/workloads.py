@@ -1,0 +1,106 @@
+"""Shared simulated workloads for the protocol benchmarks.
+
+Two traffic profiles mirroring the paper's two applications:
+  * "gromacs": intensive point-to-point (neighbour ring sends/recvs,
+    occasional collective) — §IV-A.
+  * "vasp":    intensive collectives (multiple allreduce/bcast per step,
+    little p2p) — §IV-B / Fig 4.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.comm import collectives as coll
+from repro.comm.fabric import Fabric
+from repro.core.coordinator import Coordinator
+from repro.core.two_phase_commit import RankAgent
+from repro.core.virtual import comm_gid
+
+
+def run_simulated_job(n_ranks: int, steps: int, profile: str,
+                      mode: Optional[str] = "hybrid",
+                      ckpt_at_step: Optional[int] = None,
+                      payload: int = 256) -> Dict:
+    """Run a multi-threaded simulated MPI job; returns timing + stats.
+
+    mode=None runs NATIVE (no interposition at all — direct fabric +
+    collectives), the baseline for the Fig-2 overhead ratio.
+    """
+    fab = Fabric(n_ranks)
+    coord = Coordinator(n_ranks) if mode else None
+    agents = ([RankAgent(r, fab.endpoints[r], coord, range(n_ranks),
+                         mode=mode) for r in range(n_ranks)]
+              if mode else None)
+    world = list(range(n_ranks))
+    gid = comm_gid(tuple(world))
+    snaps: Dict[int, int] = {}
+    coll_count = [0] * n_ranks
+    barrier = threading.Barrier(n_ranks)
+    t_box = {}
+
+    def work(r):
+        rng = random.Random(r)
+        ep = fab.endpoints[r]
+        a = agents[r] if agents else None
+        barrier.wait()
+        if r == 0:
+            t_box["start"] = time.perf_counter()
+        for step in range(steps):
+            if (ckpt_at_step is not None and r == 0
+                    and step == ckpt_at_step and coord):
+                coord.request_checkpoint()
+            if profile == "gromacs":
+                # neighbour exchange (halo swap), 4 sends/recvs per step
+                for d in (1, n_ranks - 1):
+                    dst = (r + d) % n_ranks
+                    (a.send if a else ep.send)(dst, b"x" * payload)
+                for d in (1, n_ranks - 1):
+                    src = (r - d) % n_ranks
+                    (a.recv if a else ep.recv)(src, timeout=60)
+                if step % 10 == 0:
+                    if a:
+                        a.allreduce(a.world_comm, 1.0, lambda x, y: x + y)
+                    else:
+                        coll.allreduce(ep, world, 1.0, lambda x, y: x + y,
+                                       gid=gid)
+                    coll_count[r] += 1
+            else:  # vasp: collective-heavy
+                for _ in range(4):
+                    if a:
+                        a.allreduce(a.world_comm, r, lambda x, y: x + y)
+                    else:
+                        coll.allreduce(ep, world, r, lambda x, y: x + y,
+                                       gid=gid)
+                    coll_count[r] += 1
+                if a:
+                    a.bcast(a.world_comm, 0, step)
+                else:
+                    coll.bcast(ep, world, 0, step, gid=gid)
+                coll_count[r] += 1
+            if a:
+                a.safe_point(lambda: snaps.setdefault(r, step))
+        barrier.wait()
+        if r == 0:
+            t_box["end"] = time.perf_counter()
+
+    threads = [threading.Thread(target=work, args=(r,), daemon=True)
+               for r in range(n_ranks)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    elapsed = t_box["end"] - t_box["start"]
+    out = {
+        "elapsed_s": elapsed,
+        "steps": steps,
+        "us_per_step": 1e6 * elapsed / steps,
+        "collectives_per_rank": coll_count[0] if coll_count else 0,
+        "snapshots": len(snaps),
+    }
+    if coord:
+        out["coordinator"] = dict(coord.stats)
+        out["agent0"] = dict(agents[0].stats)
+    return out

@@ -1,0 +1,1 @@
+from repro.comm.fabric import Fabric, Endpoint, Message  # noqa: F401

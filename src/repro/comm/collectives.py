@@ -1,0 +1,91 @@
+"""Collectives over the p2p fabric, used by the MANA-2.0 protocol layer
+(the paper's lesson §III-M: use the parallel fabric for bookkeeping, not
+the coordinator).  Protocol traffic runs on negative tags, invisible to
+the application-level drain counters.
+
+All collectives follow MPI call-ordering semantics: every member of a
+communicator issues them in the same order, so a per-(endpoint, gid)
+sequence number yields matching tags without any central coordination.
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Any, Callable, List, Sequence
+
+from repro.comm.fabric import Endpoint
+
+
+def _next_tag(ep: Endpoint, gid: int) -> int:
+    # per-(endpoint, gid) sequence numbers live ON the endpoint: a module
+    # dict keyed by id(fabric) is unsound (ids are reused after GC, which
+    # leaks stale counters across simulations — found under pytest)
+    seq = ep.coll_seq[gid] = ep.coll_seq.get(gid, 0) + 1
+    # negative tag space: fold (gid, seq) into a distinct negative int
+    return -(((gid & 0xFFFF) << 24) | (seq & 0xFFFFFF)) - 1
+
+
+def bcast(ep: Endpoint, ranks: Sequence[int], root: int, obj: Any,
+          gid: int = 0, timeout: float = 60.0) -> Any:
+    tag = _next_tag(ep, gid)
+    if ep.rank == root:
+        payload = pickle.dumps(obj)
+        for r in ranks:
+            if r != root:
+                ep.send(r, payload, tag)
+        return obj
+    return pickle.loads(ep.recv(root, tag, timeout=timeout).payload)
+
+
+def gather(ep: Endpoint, ranks: Sequence[int], root: int, obj: Any,
+           gid: int = 0, timeout: float = 60.0) -> List[Any]:
+    tag = _next_tag(ep, gid)
+    if ep.rank == root:
+        out = []
+        for r in ranks:
+            out.append(obj if r == root
+                       else pickle.loads(ep.recv(r, tag, timeout=timeout).payload))
+        return out
+    ep.send(root, pickle.dumps(obj), tag)
+    return []
+
+
+def barrier(ep: Endpoint, ranks: Sequence[int], gid: int = 0,
+            timeout: float = 60.0) -> None:
+    root = min(ranks)
+    gather(ep, ranks, root, None, gid, timeout)
+    bcast(ep, ranks, root, None, gid, timeout)
+
+
+def allreduce(ep: Endpoint, ranks: Sequence[int], obj: Any,
+              op: Callable[[Any, Any], Any], gid: int = 0,
+              timeout: float = 60.0) -> Any:
+    root = min(ranks)
+    vals = gather(ep, ranks, root, obj, gid, timeout)
+    red = None
+    if ep.rank == root:
+        red = vals[0]
+        for v in vals[1:]:
+            red = op(red, v)
+    return bcast(ep, ranks, root, red, gid, timeout)
+
+
+def alltoall(ep: Endpoint, ranks: Sequence[int], rows: List[Any],
+             gid: int = 0, timeout: float = 60.0) -> List[Any]:
+    """rows[i] goes to ranks[i]; returns the rows addressed to this rank.
+
+    This is the §III-B drain exchange: O(1) traffic to the coordinator
+    (none, in fact), all bookkeeping over the data plane.
+    """
+    tag = _next_tag(ep, gid)
+    out: List[Any] = [None] * len(ranks)
+    my_idx = list(ranks).index(ep.rank)
+    for i, r in enumerate(ranks):
+        if r == ep.rank:
+            out[my_idx] = rows[i] if r == ep.rank else None
+        else:
+            ep.send(r, pickle.dumps(rows[i]), tag)
+    out[my_idx] = rows[my_idx]
+    for i, r in enumerate(ranks):
+        if r != ep.rank:
+            out[i] = pickle.loads(ep.recv(r, tag, timeout=timeout).payload)
+    return out

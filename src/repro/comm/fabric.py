@@ -1,0 +1,184 @@
+"""In-memory multi-rank message fabric: the stand-in for the network layer.
+
+On a real TPU deployment the p2p path is device-to-device RDMA between
+hosts (pipeline sends, async parameter pushes); here it is an in-process
+queue fabric so that the MANA-2.0 protocol layer above it (drain, 2PC,
+virtual requests) runs *unchanged* and can be exercised at hundreds of
+simulated ranks on one machine.
+
+Semantics mirror MPI + the paper's bookkeeping needs:
+  * send() is buffered-asynchronous (message lands in the destination's
+    queue immediately; "in the network" = enqueued but not yet recv'd);
+  * per-(src,dst) BYTE COUNTERS are updated at send/recv time — the
+    small-grain counters of §III-B;
+  * irecv() eagerly claims a matching message if one is queued (moving it
+    out of iprobe's sight) — reproducing the exact Iprobe-miss subtlety
+    §III-B has to handle;
+  * a drain_buffer holds messages drained by the checkpoint protocol; app
+    recv() consults it first after restart.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+@dataclass
+class Message:
+    src: int
+    dst: int
+    tag: int
+    payload: bytes
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.payload)
+
+
+class _IrecvRequest:
+    """A pending nonblocking receive; may claim a queued message eagerly."""
+
+    def __init__(self, endpoint: "Endpoint", src: int, tag: Optional[int]):
+        self.endpoint = endpoint
+        self.src = src
+        self.tag = tag
+        self.message: Optional[Message] = None
+        self.consumed = False
+
+    def try_complete(self) -> bool:
+        if self.message is not None:
+            return True
+        msg = self.endpoint._claim(self.src, self.tag)
+        if msg is not None:
+            self.message = msg
+            return True
+        return False
+
+
+class Fabric:
+    """Shared state for all ranks of one simulated job."""
+
+    def __init__(self, n_ranks: int):
+        self.n_ranks = n_ranks
+        self._queues: List[deque] = [deque() for _ in range(n_ranks)]
+        self._locks = [threading.Lock() for _ in range(n_ranks)]
+        self._cvs = [threading.Condition(l) for l in self._locks]
+        self.endpoints = [Endpoint(self, r) for r in range(n_ranks)]
+
+    def deliver(self, msg: Message) -> None:
+        with self._cvs[msg.dst]:
+            self._queues[msg.dst].append(msg)
+            self._cvs[msg.dst].notify_all()
+
+
+class Endpoint:
+    def __init__(self, fabric: Fabric, rank: int):
+        self.fabric = fabric
+        self.rank = rank
+        n = fabric.n_ranks
+        # §III-B: per-pair byte counters, kept by the wrappers at runtime
+        self.sent_bytes = [0] * n
+        self.recvd_bytes = [0] * n
+        # messages drained by the checkpoint protocol, re-delivered post-restart
+        self.drain_buffer: List[Message] = []
+        self.pending_irecvs: List[_IrecvRequest] = []
+        self.coll_seq: Dict[int, int] = {}  # per-gid collective seq (upper half)
+        self._lock = fabric._locks[rank]
+        self._cv = fabric._cvs[rank]
+        self._queue = fabric._queues[rank]
+
+    # ---- send side ---------------------------------------------------------
+    def send(self, dst: int, payload: bytes, tag: int = 0) -> None:
+        """Buffered send (the Isend-with-immediate-completion model)."""
+        msg = Message(self.rank, dst, tag, payload)
+        if tag >= 0:  # internal/protocol traffic (tag<0) is not app state
+            self.sent_bytes[dst] += msg.nbytes
+        self.fabric.deliver(msg)
+
+    def isend(self, dst: int, payload: bytes, tag: int = 0):
+        self.send(dst, payload, tag)
+        return _CompletedSend()
+
+    # ---- receive side -------------------------------------------------------
+    def _match(self, msg: Message, src: int, tag: Optional[int]) -> bool:
+        if msg.src != src:
+            return False
+        if tag is None:
+            # wildcard recv is an APP-level operation: it must never claim
+            # protocol traffic (negative tags) — collectives address their
+            # messages with explicit tags
+            return msg.tag >= 0
+        return msg.tag == tag
+
+    def _claim(self, src: int, tag: Optional[int]) -> Optional[Message]:
+        """Remove a matching message from the drain buffer (already counted
+        at drain time) or the network queue (counted here)."""
+        for i, m in enumerate(self.drain_buffer):
+            if self._match(m, src, tag):
+                return self.drain_buffer.pop(i)
+        with self._lock:
+            for i, m in enumerate(self._queue):
+                if self._match(m, src, tag):
+                    del self._queue[i]
+                    if m.tag >= 0:
+                        self.recvd_bytes[src] += m.nbytes
+                    return m
+        return None
+
+    def recv(self, src: int, tag: Optional[int] = None,
+             timeout: Optional[float] = None) -> Message:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            msg = self._claim(src, tag)
+            if msg is not None:
+                return msg
+            with self._cv:
+                remaining = None if deadline is None else deadline - time.monotonic()
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"rank {self.rank} recv from {src} timed out")
+                self._cv.wait(timeout=0.01 if remaining is None
+                              else min(0.01, remaining))
+
+    def irecv(self, src: int, tag: Optional[int] = None) -> _IrecvRequest:
+        req = _IrecvRequest(self, src, tag)
+        req.try_complete()   # eager claim — creates the Iprobe-miss case
+        self.pending_irecvs.append(req)
+        return req
+
+    def iprobe(self, src: int, tag: Optional[int] = None) -> bool:
+        with self._lock:
+            return any(self._match(m, src, tag) and m.tag >= 0
+                       for m in self._queue)
+
+    # ---- drain support (§III-B) ---------------------------------------------
+    def queued_bytes_from(self, src: int) -> int:
+        with self._lock:
+            return sum(m.nbytes for m in self._queue
+                       if m.src == src and m.tag >= 0)
+
+    def drain_one(self, src: int) -> Optional[Message]:
+        """Checkpoint-time drain: pull a message out of the network into
+        the drain buffer (it will be re-delivered to the app on restart)."""
+        msg = None
+        with self._lock:
+            for i, m in enumerate(self._queue):
+                if m.src == src and m.tag >= 0:
+                    del self._queue[i]
+                    msg = m
+                    break
+        if msg is not None:
+            self.recvd_bytes[src] += msg.nbytes
+            self.drain_buffer.append(msg)
+        return msg
+
+    def gc_pending_irecvs(self) -> None:
+        self.pending_irecvs = [r for r in self.pending_irecvs if not r.consumed]
+
+
+class _CompletedSend:
+    def try_complete(self) -> bool:
+        return True

@@ -1,0 +1,233 @@
+"""Centralized checkpoint coordinator (the DMTCP-coordinator analogue).
+
+Per the paper's lessons, the coordinator is a *control-plane only*
+component: it receives O(1)-sized state words per rank and issues
+checkpoint commands; ALL data-plane bookkeeping (drain counters) travels
+over the rank-to-rank fabric (§III-M).  Ranks poll `intent_epoch` with a
+single unlocked integer read — the analogue of MANA-2.0 replacing
+hot-path locks with cheap flags (§III-I).
+
+Phase-1 closure — the §III-J/§III-K problem.  Ranks reach their safe
+points at *different* step boundaries, so a parked rank can leave a peer
+blocked inside a collective it has not yet joined.  MANA-2.0 solves this
+with comm-gid reports + "which ranks must continue to unblock later
+collective calls".  Our adaptation (DESIGN.md §2): once a checkpoint is
+pending, wrappers report per-communicator collective COUNTS (entered /
+exited, keyed by the §III-K gid, computed locally).  The coordinator
+closes phase 1 only when every live rank is parked AND, for every
+communicator, all members' exited counts are equal — which implies no
+rank is inside any collective.  A parked rank that lags a peer's entered
+count is told to CONTINUE (it is the blocker); a watchdog withdraws all
+parked ranks if closure stalls (e.g. a peer raced past the intent flag
+into a collective and cannot report).  Progress is preserved: withdrawn
+ranks keep training — a straggler delays the checkpoint, never the fleet
+(§III-J).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+class CheckpointAborted(RuntimeError):
+    pass
+
+
+class Coordinator:
+    RUNNING = "running"
+    IN_COLLECTIVE = "in_collective"
+    PARKED = "parked"
+    COMMITTED = "committed"
+    DEAD = "dead"
+
+    def __init__(self, n_ranks: int, unblock_window: float = 0.25):
+        self.n = n_ranks
+        self.unblock_window = unblock_window
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        # hot-path flag: ranks read this without taking the lock
+        self.intent_epoch = 0
+        self.done_epoch = 0
+        self.aborted_epochs: set = set()
+        self.phase1_closed: set = set()
+        self.rank_state: Dict[int, str] = {r: self.RUNNING
+                                           for r in range(n_ranks)}
+        self.in_gid: Dict[int, Optional[int]] = {r: None for r in range(n_ranks)}
+        self.last_seen: Dict[int, float] = {r: time.monotonic()
+                                            for r in range(n_ranks)}
+        self.comm_members: Dict[int, Tuple[int, ...]] = {}
+        # per-gid per-rank collective counts (reported only while pending)
+        self.entered: Dict[int, Dict[int, int]] = {}
+        self.exited: Dict[int, Dict[int, int]] = {}
+        self._commit_count = 0
+        self.stats = {"checkpoints": 0, "aborts": 0, "control_messages": 0,
+                      "continues_issued": 0, "watchdog_withdrawals": 0}
+
+    # ---- control plane -------------------------------------------------------
+    def request_checkpoint(self) -> int:
+        """Hybrid 2PC trigger: AFTER this, wrappers report collective
+        counts and ranks park at step boundaries.  Before it, the data
+        path runs with zero added synchronization."""
+        with self._cv:
+            self.intent_epoch += 1
+            self._commit_count = 0
+            self._cv.notify_all()
+            return self.intent_epoch
+
+    def register_comm(self, gid: int, ranks: Tuple[int, ...]) -> None:
+        with self._lock:
+            self.comm_members[gid] = tuple(ranks)
+            self.stats["control_messages"] += 1
+
+    def collective_enter(self, rank: int, gid: int, entered_count: int) -> None:
+        with self._cv:
+            self.rank_state[rank] = self.IN_COLLECTIVE
+            self.in_gid[rank] = gid
+            self.entered.setdefault(gid, {})[rank] = entered_count
+            self.last_seen[rank] = time.monotonic()
+            self.stats["control_messages"] += 1
+            self._cv.notify_all()
+
+    def collective_exit(self, rank: int, gid: int, exited_count: int) -> None:
+        with self._cv:
+            self.rank_state[rank] = self.RUNNING
+            self.in_gid[rank] = None
+            self.exited.setdefault(gid, {})[rank] = exited_count
+            self.last_seen[rank] = time.monotonic()
+            self.stats["control_messages"] += 1
+            self._cv.notify_all()
+
+    def mark_dead(self, rank: int) -> None:
+        with self._cv:
+            self.rank_state[rank] = self.DEAD
+            self._cv.notify_all()
+
+    def _live(self) -> List[int]:
+        return [r for r, s in self.rank_state.items() if s != self.DEAD]
+
+    # ---- phase 1: park / continue / close --------------------------------------
+    def _counts_consistent(self) -> bool:
+        """No rank inside a collective: per gid, every member that has
+        ever entered has also exited the same count."""
+        for gid, ent in self.entered.items():
+            ex = self.exited.get(gid, {})
+            for r, n_in in ent.items():
+                if self.rank_state[r] == self.DEAD:
+                    continue
+                if ex.get(r, 0) < n_in:
+                    return False
+        return True
+
+    def _lagging(self, rank: int, my_exited: Dict[int, int]) -> bool:
+        """True if some member of a comm containing `rank` has entered
+        more collectives on it than `rank` has exited — `rank` is the
+        blocker and must continue (§III-K 'unblock')."""
+        for gid, mine in my_exited.items():
+            peers = self.entered.get(gid, {})
+            for r, cnt in peers.items():
+                if r != rank and cnt > mine:
+                    return True
+        return False
+
+    def try_park(self, rank: int, epoch: int, my_exited: Dict[int, int],
+                 timeout: float = 60.0) -> str:
+        """Rank-side phase 1.  Returns "safe" | "continue" | "abort"."""
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            self.stats["control_messages"] += 1
+            if self._lagging(rank, my_exited):
+                self.stats["continues_issued"] += 1
+                return "continue"
+            self.rank_state[rank] = self.PARKED
+            for gid, cnt in my_exited.items():
+                self.exited.setdefault(gid, {})[rank] = cnt
+                self.entered.setdefault(gid, {}).setdefault(rank, cnt)
+            self.last_seen[rank] = time.monotonic()
+            self._cv.notify_all()
+            park_t = time.monotonic()
+            while True:
+                if epoch in self.aborted_epochs:
+                    self.rank_state[rank] = self.RUNNING
+                    return "abort"
+                if epoch in self.phase1_closed:
+                    return "safe"
+                live = self._live()
+                parked = [r for r in live if self.rank_state[r] == self.PARKED]
+                if len(parked) == len(live) and self._counts_consistent():
+                    self.phase1_closed.add(epoch)
+                    self._cv.notify_all()
+                    return "safe"
+                if self._lagging(rank, my_exited):
+                    self.rank_state[rank] = self.RUNNING
+                    self.stats["continues_issued"] += 1
+                    self._cv.notify_all()
+                    return "continue"
+                now = time.monotonic()
+                if now - park_t > self.unblock_window and len(parked) < len(live):
+                    # watchdog: someone is stuck without having reported
+                    # (raced past the intent flag) — withdraw and retry
+                    self.rank_state[rank] = self.RUNNING
+                    self.stats["watchdog_withdrawals"] += 1
+                    self._cv.notify_all()
+                    return "continue"
+                if now > deadline:
+                    self.aborted_epochs.add(epoch)
+                    self.stats["aborts"] += 1
+                    self._cv.notify_all()
+                    raise CheckpointAborted(
+                        f"phase-1 timeout; stragglers: {self.straggler_report()}")
+                self._cv.wait(0.01)
+
+    # ---- phase 2: commit -------------------------------------------------------
+    def report_committed(self, rank: int) -> None:
+        with self._cv:
+            self.rank_state[rank] = self.COMMITTED
+            self._commit_count += 1
+            self.stats["control_messages"] += 1
+            self._cv.notify_all()
+
+    def wait_all_committed(self, epoch: int, timeout: float = 120.0) -> None:
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self._commit_count < len(self._live()):
+                if time.monotonic() > deadline:
+                    self.aborted_epochs.add(epoch)
+                    self.stats["aborts"] += 1
+                    self._cv.notify_all()
+                    raise CheckpointAborted("phase-2 timeout")
+                self._cv.wait(0.01)
+            self.done_epoch = epoch
+            self.stats["checkpoints"] += 1
+            for r in self._live():
+                self.rank_state[r] = self.RUNNING
+            self._cv.notify_all()
+
+    def wait_released(self, epoch: int, timeout: float = 120.0) -> bool:
+        deadline = time.monotonic() + timeout
+        with self._cv:
+            while self.done_epoch < epoch:
+                if epoch in self.aborted_epochs:
+                    return False
+                if time.monotonic() > deadline:
+                    raise CheckpointAborted("release timeout")
+                self._cv.wait(0.01)
+            return True
+
+    # ---- straggler introspection (§III-J) --------------------------------------
+    def straggler_report(self, threshold: float = 0.5) -> Dict[int, Dict]:
+        now = time.monotonic()
+        out = {}
+        with self._lock:
+            for r, state in self.rank_state.items():
+                if state in (self.PARKED, self.COMMITTED, self.DEAD):
+                    continue
+                age = now - self.last_seen[r]
+                entry: Dict = {"state": state, "age_s": round(age, 3)}
+                gid = self.in_gid.get(r)
+                if gid is not None:
+                    entry["collective_gid"] = gid
+                    entry["collective_members"] = self.comm_members.get(gid)
+                if age >= threshold or state == self.IN_COLLECTIVE:
+                    out[r] = entry
+        return out

@@ -1,0 +1,158 @@
+"""MANARuntime: the paper's technique as a first-class training feature.
+
+Ties together: hybrid-2PC coordinator + rank agent (interposition),
+drain, async sharded checkpointing, elastic restart, preemption signals.
+
+The training loop only ever sees pure (state, batch) -> state functions;
+all checkpoint machinery interposes at the dispatch boundary — the JAX
+analogue of MANA wrapping MPI calls, transparent to the "application"
+(the model code).
+
+Checkpoint triggers (any may fire):
+  * every N steps            (chained-allocation use case, §I)
+  * every T wall-clock secs  (operational checkpointing)
+  * SIGUSR1                  (preemption notice — the paper's
+                              "checkpoint within the last half hour of
+                              an allocation" requirement)
+  * explicit request_checkpoint()
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.comm.fabric import Fabric
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.checkpoint import CheckpointManager
+from repro.core.coordinator import Coordinator
+from repro.core.split_state import LowerHalf
+from repro.core.two_phase_commit import RankAgent
+from repro.data.pipeline import SyntheticDataset
+from repro.training.step import abstract_params, init_train_state
+
+
+class MANARuntime:
+    def __init__(self, cfg: ModelConfig, rc: RunConfig, *, ckpt_dir: str,
+                 mesh=None, mode: str = "hybrid",
+                 ckpt_every_steps: Optional[int] = None,
+                 ckpt_every_secs: Optional[float] = None,
+                 keep: int = 3, quantize_moments: bool = False,
+                 delta_params: bool = False, seed: int = 0,
+                 install_signal_handler: bool = False):
+        self.cfg, self.rc = cfg, rc
+        self.seed = seed
+        self.lower = LowerHalf.build(cfg, rc, mesh)     # lower half: rebuilt
+        _, self.logical = abstract_params(cfg)
+        self.dataset = SyntheticDataset(cfg, rc.shape, seed=seed)
+        self.ckpt = CheckpointManager(
+            ckpt_dir, keep=keep,
+            quantize_keys=("opt/m", "opt/v") if quantize_moments else (),
+            delta_keys=("params",) if delta_params else ())
+        # protocol plane (1 real rank in-process; protocol is rank-agnostic)
+        self.fabric = Fabric(1)
+        self.coord = Coordinator(1)
+        self.agent = RankAgent(0, self.fabric.endpoints[0], self.coord,
+                               [0], mode=mode)
+        self.ckpt_every_steps = ckpt_every_steps
+        self.ckpt_every_secs = ckpt_every_secs
+        self._last_ckpt_time = time.monotonic()
+        self.state: Any = None
+        self.history: List[Dict] = []
+        self.checkpoints_taken = 0
+        if install_signal_handler:
+            signal.signal(signal.SIGUSR1,
+                          lambda *_: self.request_checkpoint())
+
+    # ---- lifecycle -----------------------------------------------------------
+    def initialize(self) -> None:
+        self.state = init_train_state(self.cfg, self.rc,
+                                      jax.random.PRNGKey(self.seed))
+        if self.lower.mesh is not None:
+            from jax.sharding import NamedSharding
+            self.state = jax.tree.map(
+                lambda x, sp: jax.device_put(
+                    x, NamedSharding(self.lower.mesh, sp)),
+                self.state, self.lower.state_specs,
+                is_leaf=lambda x: not isinstance(x, dict))
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Elastic restart: rebind the upper half onto THIS lower half
+        (which may have a different mesh shape than the writer's)."""
+        specs = {"params": None, "opt": None, "step": None}
+        state, extra = self.ckpt.restore(
+            step, mesh=self.lower.mesh,
+            specs=self.lower.state_specs if self.lower.mesh is not None
+            else None)
+        # jax-ify on single device
+        if self.lower.mesh is None:
+            state = jax.tree.map(jax.numpy.asarray, state)
+        # scalars come back as 0-d arrays
+        self.state = state
+        meta = extra.get("run_meta", {})
+        if meta.get("arch") and meta["arch"] != self.cfg.arch_id:
+            raise ValueError(
+                f"checkpoint is for arch {meta['arch']}, not {self.cfg.arch_id}")
+        self.dataset = SyntheticDataset.from_state(
+            self.cfg, self.rc.shape, extra["data"])
+        return int(extra["data"]["step"])
+
+    def request_checkpoint(self) -> None:
+        self.coord.request_checkpoint()
+
+    # ---- snapshot (phase-2 payload) --------------------------------------------
+    def _snapshot(self) -> None:
+        step = int(np.asarray(jax.device_get(self.state["step"])))
+        extra = {
+            "data": self.dataset.state_dict(step),
+            "agent": self.agent.serialize(),
+            "run_meta": {"arch": self.cfg.arch_id,
+                         "shape": self.rc.shape.name,
+                         "seed": self.seed},
+        }
+        self.ckpt.save_async(step, self.state, self.logical, extra)
+        self.checkpoints_taken += 1
+
+    # ---- the loop -----------------------------------------------------------------
+    def _maybe_trigger(self, step: int) -> None:
+        if (self.ckpt_every_steps and step > 0
+                and step % self.ckpt_every_steps == 0):
+            self.request_checkpoint()
+        elif (self.ckpt_every_secs is not None
+              and time.monotonic() - self._last_ckpt_time
+              >= self.ckpt_every_secs):
+            self.request_checkpoint()
+
+    def run(self, num_steps: int,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None,
+            stop_flag: Optional[Callable[[], bool]] = None) -> List[Dict]:
+        assert self.state is not None, "initialize() or restore() first"
+        for _ in range(num_steps):
+            step = int(np.asarray(jax.device_get(self.state["step"])))
+            if stop_flag is not None and stop_flag():
+                break
+            batch = self.dataset.get_batch(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            if self.lower.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                from repro.sharding.rules import batch_axes
+                b = batch_axes(self.lower.mesh)
+                batch = {k: jax.device_put(v, NamedSharding(
+                    self.lower.mesh, P(b, *([None] * (v.ndim - 1)))))
+                    for k, v in batch.items()}
+            self.state, metrics = self.lower.train_step(self.state, batch)
+            metrics = {k: float(np.asarray(jax.device_get(v)))
+                       for k, v in metrics.items()}
+            metrics["step"] = step
+            self.history.append(metrics)
+            if on_metrics is not None:
+                on_metrics(step, metrics)
+            # MANA safe point: step boundary (outside any dispatch)
+            self._maybe_trigger(step + 1)
+            if self.agent.safe_point(self._snapshot):
+                self._last_ckpt_time = time.monotonic()
+        self.ckpt.wait()
+        return self.history

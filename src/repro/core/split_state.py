@@ -1,0 +1,67 @@
+"""Split-process state model (paper §II-A), adapted to JAX.
+
+Upper half — checkpointed, host-serializable, *never* references
+physical resources:
+  * params / optimizer moments / step counter   (arrays + logical axes)
+  * RNG key material, data-pipeline cursor      (scalars)
+  * virtual-object tables, drain buffers,
+    per-comm collective counts                  (RankAgent.serialize())
+
+Lower half — NEVER checkpointed, rebuilt from scratch at restart:
+  * jax.Device handles, Mesh, NamedShardings
+  * compiled executables (train_step/serve_step lower+compile)
+  * the message fabric / real collective channels
+
+`LowerHalf.build()` is the restart path's "start the lower-half program
+and map the upper half back in": it constructs mesh + rules + jitted
+steps for ANY topology, which is what makes restarts elastic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.sharding.rules import ShardingRules
+
+
+@dataclasses.dataclass
+class UpperHalf:
+    state: Any                      # {"params", "opt", "step"}
+    logical: Any                    # mirrored logical-axes tree
+    data_state: Dict                # {"seed", "step"}
+    agent_blob: Optional[Dict]      # virtual tables etc.
+    run_meta: Dict                  # arch id, shape name — for validation
+
+
+@dataclasses.dataclass
+class LowerHalf:
+    mesh: Optional[Any]
+    rules: Optional[ShardingRules]
+    train_step: Callable
+    state_specs: Optional[Any]
+
+    @classmethod
+    def build(cls, cfg: ModelConfig, rc: RunConfig, mesh=None) -> "LowerHalf":
+        from repro.training.step import make_train_step, train_state_specs
+
+        if mesh is None:
+            return cls(None, None, jax.jit(make_train_step(cfg, rc, None)),
+                       None)
+        rules = ShardingRules(mesh, moe_mode=rc.moe_mode,
+                              seq_shard=rc.seq_shard,
+                              kv_time_shard=rc.kv_time_shard)
+        specs = train_state_specs(cfg, rc, rules)
+        from jax.sharding import NamedSharding
+
+        def shard(tree):
+            return jax.tree.map(lambda sp: NamedSharding(mesh, sp), tree,
+                                is_leaf=lambda x: isinstance(
+                                    x, jax.sharding.PartitionSpec))
+
+        step = jax.jit(make_train_step(cfg, rc, rules),
+                       in_shardings=(shard(specs), None),
+                       out_shardings=(shard(specs), None))
+        return cls(mesh, rules, step, specs)

@@ -1,0 +1,198 @@
+"""Hybrid two-phase-commit checkpoint protocol — rank-side agent
+(paper §III-D/E/J/L).
+
+Three selectable algorithms, matching the paper's evaluation arms:
+
+  "mana1"  — original MANA: a barrier is inserted before EVERY collective
+             (§III-D).  Reproduces both the 2–3x collective slowdown
+             (benchmarks/two_phase_commit_bench.py) and the §III-E
+             deadlock (tests exercise the Bcast-root scenario).
+  "nobarrier" — the intermediate revision that assumed no stragglers
+             (§III-J "modified algorithm ... found to have some flaws"):
+             ranks park unconditionally, with no collective-count
+             handshake — a peer blocked inside a collective aborts the
+             checkpoint (the flaw, demonstrated in tests).
+  "hybrid" — MANA-2.0 (as adapted, DESIGN.md §2): steady-state
+             collectives run natively with zero added synchronization
+             and zero coordinator traffic.  Once a checkpoint is
+             pending, wrappers additionally report per-comm collective
+             counts (keyed by the locally-computed §III-K gid) and ranks
+             park at step boundaries under the coordinator's
+             count-equalization rule; parked blockers are told to
+             CONTINUE (§III-K "unblock").  Collectives stay
+             wire-uniform, so the §III-E mixed-semantics deadlock cannot
+             occur by construction; the drain (§III-B) covers app p2p
+             traffic, and count-equalization guarantees no collective
+             payload is in flight at the cut.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from typing import Any, Callable, Dict, Optional, Sequence
+
+from repro.comm import collectives as coll
+from repro.comm.fabric import Endpoint
+from repro.core.coordinator import CheckpointAborted, Coordinator
+from repro.core.drain import drain_rank
+from repro.core.virtual import VirtualCommTable, VirtualRequestTable, comm_gid
+
+
+class RankAgent:
+    """Per-rank MANA-2.0 agent: interposition wrappers + 2PC state machine."""
+
+    def __init__(self, rank: int, ep: Endpoint, coordinator: Coordinator,
+                 world: Sequence[int], mode: str = "hybrid"):
+        assert mode in ("mana1", "nobarrier", "hybrid")
+        self.rank = rank
+        self.ep = ep
+        self.coord = coordinator
+        self.mode = mode
+        self.done_epoch = 0
+        # upper-half tables (serialized into every checkpoint)
+        self.comms = VirtualCommTable()
+        self.requests = VirtualRequestTable()
+        self.world_comm = self.comms.create(tuple(world), real=ep)
+        self.coord.register_comm(comm_gid(tuple(world)), tuple(world))
+        # per-gid collective counters (exited); upper-half state
+        self.coll_counts: Dict[int, int] = defaultdict(int)
+        # DMTCP_PLUGIN_DISABLE_CKPT analogue: cheap depth counter, no lock
+        self.in_lower_half = 0
+        self.stats = {"collectives": 0, "barriers_inserted": 0,
+                      "coordinator_reports": 0, "continues": 0}
+
+    # ---- interposition helpers ------------------------------------------------
+    def _ckpt_pending(self) -> bool:
+        # single int compare — the §III-I hot-path lesson
+        return self.coord.intent_epoch > self.done_epoch
+
+    def comm_ranks(self, vcomm: int):
+        return self.comms.get(vcomm).world_ranks
+
+    def create_comm(self, world_ranks) -> int:
+        vcomm = self.comms.create(tuple(world_ranks), real=self.ep)
+        self.coord.register_comm(comm_gid(tuple(world_ranks)),
+                                 tuple(world_ranks))
+        return vcomm
+
+    # ---- wrapped p2p ------------------------------------------------------------
+    def send(self, dst: int, payload: bytes, tag: int = 0) -> None:
+        self.in_lower_half += 1
+        try:
+            self.ep.send(dst, payload, tag)
+        finally:
+            self.in_lower_half -= 1
+
+    def recv(self, src: int, tag: Optional[int] = None,
+             timeout: Optional[float] = None):
+        self.in_lower_half += 1
+        try:
+            return self.ep.recv(src, tag, timeout=timeout)
+        finally:
+            self.in_lower_half -= 1
+
+    def irecv(self, src: int, tag: Optional[int] = None) -> int:
+        req = self.ep.irecv(src, tag)
+        return self.requests.create(req, kind="p2p", src=src, tag=tag)
+
+    def test(self, vreq: int) -> bool:
+        return self.requests.test(vreq, lambda r: r.try_complete())
+
+    def wait(self, vreq: int) -> None:
+        self.requests.wait(vreq, lambda r: r.try_complete(),
+                           spin=lambda: time.sleep(0.0005))
+
+    # ---- wrapped collectives ------------------------------------------------------
+    def collective(self, vcomm: int, fn: Callable[..., Any], *args, **kw) -> Any:
+        """Run collective `fn(ep, ranks, *args, gid=..., **kw)` under the
+        selected 2PC algorithm.  The implementation is ALWAYS the native
+        one (wire-uniform); algorithms differ only in synchronization and
+        reporting."""
+        ranks = self.comm_ranks(vcomm)
+        gid = comm_gid(ranks)
+        self.stats["collectives"] += 1
+        pending = self._ckpt_pending()
+
+        if self.mode == "mana1":
+            # original MANA: unconditional barrier before the collective
+            self.stats["barriers_inserted"] += 1
+            coll.barrier(self.ep, ranks, gid=gid)
+        report = pending and self.mode == "hybrid"
+        self.in_lower_half += 1
+        try:
+            if report:
+                self.stats["coordinator_reports"] += 1
+                self.coord.collective_enter(self.rank, gid,
+                                            self.coll_counts[gid] + 1)
+            out = fn(self.ep, ranks, *args, gid=gid, **kw)
+            self.coll_counts[gid] += 1
+            if report:
+                self.coord.collective_exit(self.rank, gid,
+                                           self.coll_counts[gid])
+        finally:
+            self.in_lower_half -= 1
+        return out
+
+    def bcast(self, vcomm: int, root: int, obj: Any) -> Any:
+        return self.collective(vcomm, coll.bcast, root, obj)
+
+    def allreduce(self, vcomm: int, obj: Any, op) -> Any:
+        return self.collective(vcomm, coll.allreduce, obj, op)
+
+    def barrier_op(self, vcomm: int) -> None:
+        return self.collective(vcomm, coll.barrier)
+
+    def alltoall(self, vcomm: int, rows) -> Any:
+        return self.collective(vcomm, coll.alltoall, rows)
+
+    # ---- the safe point (step boundary) ---------------------------------------------
+    def safe_point(self, snapshot: Callable[[], None],
+                   timeout: float = 60.0) -> bool:
+        """Call at every step boundary.  Fast path: one int compare.
+
+        Under a pending checkpoint: park under the coordinator's
+        count-equalization rule (phase 1); once closed, drain p2p
+        (§III-B), snapshot, and commit (phase 2).  Returns True iff a
+        checkpoint was taken at THIS boundary.
+        """
+        if not self._ckpt_pending():
+            return False
+        epoch = self.coord.intent_epoch
+        assert self.in_lower_half == 0, "safe point inside lower half"
+        if self.mode == "nobarrier":
+            # flawed revision: park unconditionally, no count handshake
+            verdict = self.coord.try_park(self.rank, epoch, {},
+                                          timeout=timeout)
+        else:
+            verdict = self.coord.try_park(self.rank, epoch,
+                                          dict(self.coll_counts),
+                                          timeout=timeout)
+        if verdict == "continue":
+            self.stats["continues"] += 1
+            return False
+        if verdict == "abort":
+            self.done_epoch = epoch
+            return False
+        # phase 1 closed: every rank parked, no collective in flight
+        world = self.comm_ranks(self.world_comm)
+        drain_rank(self.ep, world, gid=comm_gid(world), timeout=timeout)
+        ok = False
+        try:
+            snapshot()
+            self.coord.report_committed(self.rank)
+            if self.rank == min(world):
+                self.coord.wait_all_committed(epoch, timeout=timeout)
+            ok = self.coord.wait_released(epoch, timeout=timeout)
+        except CheckpointAborted:
+            ok = False
+        self.done_epoch = epoch
+        return ok
+
+    # ---- serialization (upper half) -----------------------------------------------
+    def serialize(self) -> Dict:
+        return {"rank": self.rank,
+                "comms": self.comms.serialize(),
+                "requests": self.requests.serialize(),
+                "coll_counts": dict(self.coll_counts),
+                "drain_buffer": [(m.src, m.dst, m.tag, m.payload.hex())
+                                 for m in self.ep.drain_buffer]}

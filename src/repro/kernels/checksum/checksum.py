@@ -1,0 +1,37 @@
+"""Pallas TPU kernel: blockwise Fletcher partial sums for checkpoint
+integrity (hot path: every checkpoint shard is checksummed at write and
+at restore).
+
+Tiling: the uint32 word stream is shaped (n_blocks, BLOCK); each grid
+step stages one (1, BLOCK) tile in VMEM (8 KiB) and reduces it to two
+uint32 partial sums.  The cross-block fold (tiny) stays in jnp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.checksum.ref import BLOCK
+
+
+def _block_sums_kernel(w_ref, out_ref):
+    w = w_ref[...]                                   # (1, BLOCK) uint32
+    idx = jax.lax.broadcasted_iota(jnp.uint32, w.shape, 1)
+    s1 = jnp.sum(w, dtype=jnp.uint32)
+    s2 = jnp.sum(w * idx, dtype=jnp.uint32)
+    out_ref[0, 0] = s1
+    out_ref[0, 1] = s2
+
+
+def block_sums_pallas(words: jnp.ndarray, interpret: bool = True):
+    """words: (n_blocks, BLOCK) uint32 -> (n_blocks, 2) uint32."""
+    n_blocks = words.shape[0]
+    return pl.pallas_call(
+        _block_sums_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 2), jnp.uint32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,26 @@
+"""jit'd wrapper for the checksum kernel (+ oracle dispatch)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.checksum import ref
+from repro.kernels.checksum.checksum import block_sums_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def checksum(data: jnp.ndarray, use_kernel: bool = True,
+             interpret: bool = True) -> jnp.ndarray:
+    """uint32 checksum of an arbitrary array.
+
+    use_kernel=True runs the Pallas kernel (interpret=True on CPU; the
+    TPU build flips interpret off).  use_kernel=False runs the oracle.
+    """
+    words = ref.to_words(data)
+    if use_kernel:
+        sums = block_sums_pallas(words, interpret=interpret)
+    else:
+        sums = ref.block_sums_ref(words)
+    return ref.fold(sums)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle: blockwise Fletcher-style checksum over uint32 words.
+
+Checkpoint shards are integrity-checked at write and restore time
+(EXPERIMENTS.md §Protocol, Fig-3 analogue).  The reduction is defined
+blockwise so the Pallas kernel and this oracle agree bit-exactly:
+
+  per block b (BLOCK uint32 words): s1_b = sum(w), s2_b = sum(i * w)
+  fold over blocks with positional reweighting:
+      c = XOR-combine of s1_b*(b+1) and (s2_b*(b+1)^2) << 1
+
+All arithmetic is uint32 with natural mod-2^32 wraparound (no x64 dep).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK = 2048  # uint32 words per block
+
+
+def to_words(data: jnp.ndarray) -> jnp.ndarray:
+    """Any array -> (n_blocks, BLOCK) uint32 word blocks (zero padded)."""
+    raw = jnp.ravel(data)
+    if raw.dtype == jnp.uint8:
+        raw8 = raw
+    else:
+        raw8 = jax.lax.bitcast_convert_type(raw, jnp.uint8).ravel()
+    pad = (-raw8.size) % (4 * BLOCK)
+    raw8 = jnp.pad(raw8, (0, pad))
+    b = raw8.reshape(-1, 4).astype(jnp.uint32)
+    words = b[:, 0] | (b[:, 1] << 8) | (b[:, 2] << 16) | (b[:, 3] << 24)
+    return words.reshape(-1, BLOCK)
+
+
+def block_sums_ref(words: jnp.ndarray) -> jnp.ndarray:
+    """(n_blocks, BLOCK) uint32 -> (n_blocks, 2) uint32 partial sums."""
+    idx = jnp.arange(words.shape[-1], dtype=jnp.uint32)
+    s1 = jnp.sum(words, axis=-1, dtype=jnp.uint32)
+    s2 = jnp.sum(words * idx, axis=-1, dtype=jnp.uint32)
+    return jnp.stack([s1, s2], axis=-1)
+
+
+def fold(sums: jnp.ndarray) -> jnp.ndarray:
+    """(n_blocks, 2) uint32 -> scalar uint32 checksum."""
+    n = sums.shape[0]
+    pos = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(1)
+    f1 = jnp.sum(sums[:, 0] * pos, dtype=jnp.uint32)
+    f2 = jnp.sum(sums[:, 1] * pos * pos, dtype=jnp.uint32)
+    return f1 ^ (f2 << jnp.uint32(1))
+
+
+def checksum_ref(data: jnp.ndarray) -> jnp.ndarray:
+    return fold(block_sums_ref(to_words(data)))
+
+
+def checksum_np(data: np.ndarray) -> int:
+    """NumPy twin used on the host write path (identical definition)."""
+    raw = np.ascontiguousarray(data).view(np.uint8).ravel()
+    pad = (-raw.size) % (4 * BLOCK)
+    if pad:
+        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
+    words = raw.view("<u4").reshape(-1, BLOCK)
+    idx = np.arange(BLOCK, dtype=np.uint32)
+    with np.errstate(over="ignore"):
+        s1 = np.add.reduce(words, axis=-1, dtype=np.uint32)
+        s2 = np.add.reduce((words * idx).astype(np.uint32), axis=-1,
+                           dtype=np.uint32)
+        n = s1.shape[0]
+        pos = (np.arange(n, dtype=np.uint32) + np.uint32(1))
+        f1 = np.add.reduce(s1 * pos, dtype=np.uint32)
+        f2 = np.add.reduce(s2 * pos * pos, dtype=np.uint32)
+    return int(f1 ^ np.uint32((int(f2) << 1) & 0xFFFFFFFF))

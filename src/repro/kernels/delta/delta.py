@@ -1,0 +1,32 @@
+"""Pallas TPU kernel: XOR delta over uint32 word tiles.
+
+Tiling: two (1, DBLOCK) uint32 tiles (8 KiB each) staged in VMEM per grid
+step; output overwrites in place semantically (separate buffer here).
+Pure VPU bit-op — the kernel exists to keep the checkpoint hot path on
+device and fused with the DMA pipeline rather than bouncing via host.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.delta.ref import DBLOCK
+
+
+def _xor_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] ^ b_ref[...]
+
+
+def xor_pallas(a: jnp.ndarray, b: jnp.ndarray, interpret: bool = True):
+    """a, b: (n, DBLOCK) uint32 -> (n, DBLOCK) uint32."""
+    n = a.shape[0]
+    return pl.pallas_call(
+        _xor_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, DBLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((1, DBLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, DBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, jnp.uint32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,19 @@
+"""jit'd wrapper for XOR delta encode/apply."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.delta import ref
+from repro.kernels.delta.delta import xor_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def delta(cur: jnp.ndarray, prev: jnp.ndarray, use_kernel: bool = True,
+          interpret: bool = True) -> jnp.ndarray:
+    a, b = ref.to_words(cur), ref.to_words(prev)
+    if use_kernel:
+        return xor_pallas(a, b, interpret=interpret)
+    return a ^ b

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle: bitwise XOR delta encoding between checkpoints.
+
+Incremental checkpoints: XOR against the previous checkpoint turns
+unchanged bytes into zero runs (cheap to compress on the write path) and
+is its own inverse for apply.  Operates on the uint32 bit pattern, so it
+is exact for every dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DBLOCK = 2048  # uint32 words per tile
+
+
+def to_words(x: jnp.ndarray) -> jnp.ndarray:
+    raw = jnp.ravel(x)
+    raw8 = (raw if raw.dtype == jnp.uint8
+            else jax.lax.bitcast_convert_type(raw, jnp.uint8).ravel())
+    pad = (-raw8.size) % (4 * DBLOCK)
+    raw8 = jnp.pad(raw8, (0, pad))
+    b = raw8.reshape(-1, 4).astype(jnp.uint32)
+    w = b[:, 0] | (b[:, 1] << 8) | (b[:, 2] << 16) | (b[:, 3] << 24)
+    return w.reshape(-1, DBLOCK)
+
+
+def delta_ref(cur: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """XOR words of two equal-shaped arrays -> (n, DBLOCK) uint32."""
+    return to_words(cur) ^ to_words(prev)
+
+
+def delta_np(cur: np.ndarray, prev: np.ndarray) -> np.ndarray:
+    a = np.ascontiguousarray(cur).view(np.uint8).ravel()
+    b = np.ascontiguousarray(prev).view(np.uint8).ravel()
+    assert a.size == b.size
+    return a ^ b
+
+
+def apply_np(prev: np.ndarray, delta: np.ndarray, shape, dtype) -> np.ndarray:
+    b = np.ascontiguousarray(prev).view(np.uint8).ravel()
+    out = (b ^ delta).view(np.dtype(dtype))
+    return out.reshape(shape)

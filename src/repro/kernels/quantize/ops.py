@@ -1,0 +1,29 @@
+"""jit'd wrappers for blockwise int8 quantize/dequantize."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize import ref
+from repro.kernels.quantize.quantize import dequantize_pallas, quantize_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def quantize(x: jnp.ndarray, use_kernel: bool = True, interpret: bool = True):
+    """x: any shape/float dtype -> (int8 blocks, f32 scales, pad)."""
+    blocks, pad = ref.pad_to_blocks(x)
+    if use_kernel:
+        q, s = quantize_pallas(blocks, interpret=interpret)
+    else:
+        q, s = ref.quantize_ref(blocks)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def dequantize(q: jnp.ndarray, s: jnp.ndarray, use_kernel: bool = True,
+               interpret: bool = True):
+    if use_kernel:
+        return dequantize_pallas(q, s, interpret=interpret)
+    return ref.dequantize_ref(q, s)

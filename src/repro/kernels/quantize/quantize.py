@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: blockwise absmax int8 quantize / dequantize.
+
+Tiling: (TILE_ROWS, QBLOCK) f32 tiles staged in VMEM (TILE_ROWS x 4 KiB);
+each row is one quantization block, reduced to its absmax scale and
+rounded in-register.  8 rows/tile keeps the working set at 32 KiB +
+8 KiB output — comfortably inside one TPU core's VMEM while giving the
+VPU long contiguous lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quantize.ref import QBLOCK
+
+TILE_ROWS = 8
+
+
+def _fit_rows(n: int) -> int:
+    """Largest divisor of n that is <= TILE_ROWS (trace-time only)."""
+    rows = min(TILE_ROWS, n)
+    while n % rows:
+        rows -= 1
+    return rows
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...]                                   # (R, QBLOCK) f32
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def quantize_pallas(blocks: jnp.ndarray, interpret: bool = True):
+    """(n, QBLOCK) f32 -> ((n, QBLOCK) int8, (n, 1) f32)."""
+    n = blocks.shape[0]
+    rows = _fit_rows(n)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(n // rows,),
+        in_specs=[pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, QBLOCK), jnp.int8),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)],
+        interpret=interpret,
+    )(blocks)
+
+
+def dequantize_pallas(q: jnp.ndarray, scale: jnp.ndarray,
+                      interpret: bool = True):
+    n = q.shape[0]
+    rows = _fit_rows(n)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(n // rows,),
+        in_specs=[pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((rows, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, QBLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, QBLOCK), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle: blockwise absmax int8 quantization.
+
+Checkpoint compression (2x for bf16 moments, 4x for f32) — MANA-2.0's
+Fig-3 concern is checkpoint write time; shrinking bytes moves it
+directly.  Error feedback is handled at the call site (optimizer moments
+only by default; params stay exact).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+QBLOCK = 1024  # elements per quantization block
+
+
+def pad_to_blocks(x: jnp.ndarray):
+    flat = jnp.ravel(x).astype(jnp.float32)
+    pad = (-flat.size) % QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, QBLOCK), pad
+
+
+def quantize_ref(blocks: jnp.ndarray):
+    """(n, QBLOCK) f32 -> ((n, QBLOCK) int8, (n, 1) f32 scales)."""
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_np(x: np.ndarray):
+    flat = np.ravel(x).astype(np.float32)
+    pad = (-flat.size) % QBLOCK
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.float32)])
+    blocks = flat.reshape(-1, QBLOCK)
+    amax = np.max(np.abs(blocks), axis=-1, keepdims=True)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(blocks / scale), -127, 127).astype(np.int8)
+    return q, scale, pad
+
+
+def dequantize_np(q: np.ndarray, scale: np.ndarray, pad: int, shape, dtype):
+    out = (q.astype(np.float32) * scale).ravel()
+    if pad:
+        out = out[:-pad]
+    return out.reshape(shape).astype(dtype)

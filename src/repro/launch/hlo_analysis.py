@@ -1,0 +1,369 @@
+"""Trip-count-aware HLO cost extraction for the roofline.
+
+Why this exists: `compiled.cost_analysis()` visits every While body ONCE
+— with scan-over-layers (and inner attention/loss scans) it undercounts
+FLOPs, bytes and collectives by the loop trip counts (verified
+empirically; recorded in EXPERIMENTS.md §Roofline notes).  This module
+parses the post-GSPMD HLO text instead and expands loops:
+
+  cost(computation) = own dots/collectives/fusion-IO
+                    + Σ while: trip_count x cost(body) + cost(cond)
+                    + Σ fusion/call: cost(callee)
+
+Extracted per module (all PER-DEVICE, since the partitioned module is
+the per-device program):
+  * dot_flops        — 2 * prod(result) * prod(lhs contracting dims)
+  * fusion_io_bytes  — Σ (operand + result bytes) of fusion/elementwise
+                       ops at loop-expanded counts: an HBM-traffic proxy
+                       (XLA fusions are the units of HBM round trips)
+  * collective_bytes — Σ result bytes per collective kind
+Trip counts come from the `known_trip_count` backend_config on each
+while op (fallback: the compare constant in the condition computation).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_TYPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _parse_type(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Parse one type string (possibly a tuple type) -> list of (dtype, dims)."""
+    out = []
+    for m in _TYPE_RE.finditer(s):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(types) -> int:
+    tot = 0
+    for dt, dims in types:
+        n = 1
+        for d in dims:
+            n *= d
+        tot += n * _DTYPE_BYTES.get(dt, 4)
+    return tot
+
+
+@dataclass
+class Instr:
+    name: str
+    kind: str
+    result_types: list
+    operands: List[str]
+    raw: str
+    callee: Optional[str] = None
+    body: Optional[str] = None
+    cond: Optional[str] = None
+    trip: Optional[int] = None
+    contracting: Tuple[int, ...] = ()
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, list] = field(default_factory=dict)
+    instrs: List[Instr] = field(default_factory=list)
+    symbols: Dict[str, list] = field(default_factory=dict)
+
+
+_OP_SPLIT_RE = re.compile(r"^((?:\([^=]*\)|[\w\[\],{} ]+?))\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_CALLEE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
+_ATTR_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_ATTR_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    comment_re = re.compile(r"/\*.*?\*/")
+    for line in text.splitlines():
+        stripped = comment_re.sub("", line).rstrip()
+        if not stripped:
+            continue
+        if not line.startswith(" ") and stripped.endswith("{"):
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                # params: "name: TYPE, name: TYPE"
+                for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                      m.group(2)):
+                    cur.params[pm.group(1)] = _parse_type(pm.group(2))
+                    cur.symbols[pm.group(1)] = _parse_type(pm.group(2))
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(stripped)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        om = _OP_SPLIT_RE.match(rhs)
+        if not om:
+            continue
+        type_str, kind = om.group(1).strip(), om.group(2)
+        result_types = _parse_type(type_str)
+        cur.symbols[name] = result_types
+        args_part = rhs[om.end():]
+        paren_depth = 1
+        arg_str = []
+        for ch in args_part:
+            if ch == "(":
+                paren_depth += 1
+            elif ch == ")":
+                paren_depth -= 1
+                if paren_depth == 0:
+                    break
+            arg_str.append(ch)
+        arg_str = "".join(arg_str)
+        attrs = args_part[len(arg_str):]
+        ins = Instr(name, kind, result_types,
+                    _OPERAND_RE.findall(arg_str), rhs)
+        cm = _ATTR_CALLEE.search(attrs)
+        if cm:
+            ins.callee = cm.group(1)
+        bm = _ATTR_BODY.search(attrs)
+        if bm:
+            ins.body = bm.group(1)
+        dm = _ATTR_COND.search(attrs)
+        if dm:
+            ins.cond = dm.group(1)
+        tm = _ATTR_TRIP.search(attrs)
+        if tm:
+            ins.trip = int(tm.group(1))
+        lm = _ATTR_LHS_C.search(attrs)
+        if lm and lm.group(1):
+            ins.contracting = tuple(int(x) for x in lm.group(1).split(","))
+        cur.instrs.append(ins)
+    return comps
+
+
+@dataclass
+class Cost:
+    dot_flops: float = 0.0
+    fusion_io_bytes: float = 0.0
+    convert_bytes_discounted: float = 0.0
+    collectives: Dict[str, float] = field(default_factory=dict)
+    collective_count: float = 0.0
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.fusion_io_bytes += other.fusion_io_bytes * mult
+        self.convert_bytes_discounted += other.convert_bytes_discounted * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] = self.collectives.get(k, 0.0) + v * mult
+        self.collective_count += other.collective_count * mult
+
+
+def _is_pure_convert(callee: "Computation") -> bool:
+    """True if the fused computation is only dtype conversion (+ copies)."""
+    kinds = {i.kind for i in callee.instrs if i.kind != "parameter"}
+    return bool(kinds) and kinds <= {"convert", "copy", "bitcast", "transpose"}
+
+
+def _dus_root_update_bytes(callee: "Computation"):
+    """If the fusion root is dynamic-update-slice, the written bytes are
+    the update operand's, not the full result buffer's."""
+    if not callee.instrs:
+        return None
+    root = callee.instrs[-1]
+    if root.kind != "dynamic-update-slice" or len(root.operands) < 2:
+        return None
+    upd = root.operands[1]
+    return _nbytes(callee.symbols.get(upd, [])) or None
+
+
+def _sliced_usage_bytes(callee: "Computation", pname: str):
+    """If callee parameter `pname` is consumed ONLY by dynamic-slice ops,
+    return the summed slice-result bytes; else None (full-buffer read)."""
+    users = [i for i in callee.instrs if pname in i.operands]
+    if not users:
+        return 0
+    if all(u.kind in ("dynamic-slice", "slice") for u in users):
+        return sum(_nbytes(u.result_types) for u in users)
+    return None
+
+
+def _convert_fed_ratio(comp: "Computation", ins: "Instr") -> float:
+    """If every operand of a collective is produced by a convert-style
+    fusion (or dot upcast) whose inputs are narrower, return the
+    narrow/wide byte ratio (e.g. 0.5 for bf16->f32); else 1.0."""
+    widths = []
+    for op in ins.operands:
+        producer = next((i for i in comp.instrs if i.name == op), None)
+        if producer is None or not producer.result_types:
+            return 1.0
+        out_dt = producer.result_types[0][0]
+        in_dts = []
+        for src in producer.operands:
+            ts = comp.symbols.get(src, [])
+            if ts:
+                in_dts.append(ts[0][0])
+        if not in_dts:
+            return 1.0
+        wide = _DTYPE_BYTES.get(out_dt, 4)
+        narrow = max(_DTYPE_BYTES.get(d, 4) for d in in_dts)
+        if narrow >= wide:
+            return 1.0
+        widths.append(narrow / wide)
+    return min(widths) if widths else 1.0
+
+
+def _find_trip(comps, ins) -> int:
+    if ins.trip is not None:
+        return ins.trip
+    # fallback: largest integer constant in the condition computation
+    cond = comps.get(ins.cond)
+    best = 1
+    if cond is not None:
+        for ci in cond.instrs:
+            m = re.search(r"constant\((\d+)\)", ci.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_FUSION_KINDS = {"fusion"}
+_EXPAND_KINDS = {"call", "custom-call", "map", "reduce", "reduce-window",
+                 "scatter", "select-and-scatter", "sort"}
+
+
+def analyze_computation(comps: Dict[str, Computation], name: str,
+                        memo: Dict[str, Cost]) -> Cost:
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    cost = Cost()
+    memo[name] = cost
+    if comp is None:
+        return cost
+    for ins in comp.instrs:
+        if ins.kind == "while":
+            trip = _find_trip(comps, ins)
+            body_cost = analyze_computation(comps, ins.body, memo)
+            cost.add(body_cost, trip)
+            if ins.cond:
+                cost.add(analyze_computation(comps, ins.cond, memo), trip)
+        elif ins.kind == "conditional":
+            # count the most expensive branch once
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", ins.raw)
+            names = _OPERAND_RE.findall(branches[0]) if branches else []
+            if names:
+                worst = max((analyze_computation(comps, n, memo)
+                             for n in names), key=lambda c: c.dot_flops)
+                cost.add(worst)
+        elif ins.kind in _FUSION_KINDS:
+            # HBM traffic proxy: operands + results of the fusion, with
+            # two corrections that matter enormously under scans:
+            #  (i) an operand with exactly the result's type+shape is
+            #      assumed ALIASED (in-place dynamic-update-slice of a
+            #      scan ys/carry buffer) — count the result only;
+            #  (ii) an operand whose callee parameter is consumed solely
+            #      by dynamic-slice ops is a loop-invariant buffer being
+            #      windowed — count the slice(s), not the buffer.
+            callee = comps.get(ins.callee) if ins.callee else None
+            #  (iii) a pure dtype-convert fusion materializes on XLA:CPU
+            #  but fuses into its consumer on TPU (MXU reads bf16): count
+            #  it as free, tracking the discount for transparency.
+            if callee and _is_pure_convert(callee):
+                cost.convert_bytes_discounted += _nbytes(ins.result_types)
+                continue
+            #  (iv) a fusion whose root is dynamic-update-slice writes
+            #  only the update window; the full-size result buffer is
+            #  aliased storage.
+            io = _dus_root_update_bytes(callee) if callee else None
+            io = io if io is not None else _nbytes(ins.result_types)
+            res_sig = tuple(ins.result_types)
+            aliased_once = False
+            param_order = list(callee.params) if callee else []
+            for idx, op in enumerate(ins.operands):
+                types = comp.symbols.get(op, [])
+                if not aliased_once and tuple(types) == res_sig:
+                    aliased_once = True
+                    continue
+                nb = _nbytes(types)
+                if callee and idx < len(param_order):
+                    pname = param_order[idx]
+                    slice_nb = _sliced_usage_bytes(callee, pname)
+                    if slice_nb is not None:
+                        nb = slice_nb
+                io += nb
+            cost.fusion_io_bytes += io
+            if ins.callee:
+                cost.add(analyze_computation(comps, ins.callee, memo))
+        elif ins.kind in ("dot", "dot_general") or ins.kind.startswith("dot"):
+            out_elems = 1
+            for _, dims in ins.result_types:
+                for d in dims:
+                    out_elems *= d
+            k = 1
+            lhs = comp.symbols.get(ins.operands[0]) if ins.operands else None
+            if lhs:
+                _, ldims = lhs[0]
+                for ci in ins.contracting:
+                    if ci < len(ldims):
+                        k *= ldims[ci]
+            cost.dot_flops += 2.0 * out_elems * k
+        elif any(ins.kind.startswith(c) for c in COLLECTIVES):
+            if ins.kind.endswith("-done"):
+                continue  # counted at -start
+            base = next(c for c in COLLECTIVES if ins.kind.startswith(c))
+            nb = _nbytes(ins.result_types)
+            # XLA:CPU upcasts bf16 dots/converts to f32 and the partial
+            # sums get all-reduced in f32; a TPU build reduces the source
+            # dtype.  When every operand is a pure-convert fusion, count
+            # the collective at the narrower pre-convert width.
+            ratio = _convert_fed_ratio(comp, ins)
+            cost.collectives[base] = (cost.collectives.get(base, 0.0)
+                                      + nb * ratio)
+            cost.collective_count += 1
+        elif ins.kind in _EXPAND_KINDS and ins.callee:
+            cost.add(analyze_computation(comps, ins.callee, memo))
+    return cost
+
+
+def analyze_hlo(text: str) -> Dict:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: computation named main*
+        entry = next((n for n in comps if n.startswith("main")), None)
+    cost = analyze_computation(comps, entry, {})
+    return {
+        "entry": entry,
+        "dot_flops": cost.dot_flops,
+        "fusion_io_bytes": cost.fusion_io_bytes,
+        "convert_bytes_discounted": cost.convert_bytes_discounted,
+        "collectives": cost.collectives,
+        "collective_bytes": sum(cost.collectives.values()),
+        "collective_count": cost.collective_count,
+    }

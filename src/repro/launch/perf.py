@@ -1,0 +1,48 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration driver (§Perf): run one dry-run cell under RunConfig
+overrides, print the roofline terms, append to a JSON log.
+
+  PYTHONPATH=src python -m repro.launch.perf --arch hymba-1.5b \
+      --shape train_4k --label h3_remat_dots --rc '{"remat_policy":"dots"}'
+"""
+import argparse
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--rc", default="{}")
+    ap.add_argument("--pod", action="store_true")
+    ap.add_argument("--log", default="perf_log.json")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", ".."))
+    from benchmarks.roofline import analyze_cell
+
+    cell = run_cell(args.arch, args.shape, args.pod, json.loads(args.rc))
+    cell["label"] = args.label
+    cell["rc_overrides"] = json.loads(args.rc)
+    out = {}
+    if cell["status"] == "ok":
+        out = analyze_cell(cell)
+        print(json.dumps({k: (round(v, 4) if isinstance(v, float) else v)
+                          for k, v in out.items()}, indent=1))
+    else:
+        print(json.dumps({k: v for k, v in cell.items() if k != "trace"}))
+    log = []
+    if os.path.exists(args.log):
+        log = json.load(open(args.log))
+    log.append(cell)
+    json.dump(log, open(args.log, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

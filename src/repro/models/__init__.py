@@ -1,0 +1,7 @@
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    forward_loss,
+    prefill,
+    decode_step,
+    init_decode_state,
+)

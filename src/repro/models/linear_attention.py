@@ -1,0 +1,116 @@
+"""Chunked linear attention with per-channel decay — the shared engine for
+RWKV-6 (Finch) time-mix and Mamba-2-style SSM heads (hymba).
+
+Recurrences supported (state S: (B, H, dk, dv)):
+
+  mode="mamba":  S_t = exp(lw_t) * S_{t-1} + k_t^T v_t ;  y_t = q_t S_t
+  mode="rwkv":   y_t = r_t S_{t-1} + (r_t * (u * k_t)) v_t ;
+                 S_t = exp(lw_t) * S_{t-1} + k_t^T v_t
+
+(lw = per-channel log decay <= 0, applied along dk.)
+
+TPU adaptation: instead of a length-S sequential scan, sequences are
+processed in chunks of length C — intra-chunk interactions become (C, C)
+matmuls (MXU-friendly) via the factorization
+  exp(W_i - W_j) = exp(W_i) * exp(-W_j)
+with W the in-chunk cumulative log decay.  Numerical safety: the
+factorization overflows f32 when the in-chunk span |W| exceeds ~88, so we
+floor the *per-step* log decay at -LW_MIN (span <= C * LW_MIN = 80).
+Flooring per step keeps all pairwise differences exact (an absolute clamp
+on W would corrupt them); it only limits how fast a channel can forget
+(decay >= e^-2.5 per token — e.g. gone to ~1e-9 within 8 tokens), which
+is the TPU-native trade documented in DESIGN.md.  The same floor is
+applied in the single-token decode step so train/prefill/decode agree
+bitwise-modulo-chunking (property-tested against the naive recurrence).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_CHUNK = 32
+LW_MIN = 2.5   # per-step log-decay floor
+SAFE_CHUNK = 32  # hard cap: chunk * LW_MIN = 80 < 88 (f32 exp range) —
+#                  the engine enforces this regardless of the request
+#                  (found by the hypothesis chunking-invariance test:
+#                  chunk=64 overflows exp(-W) and corrupts outputs)
+
+
+def chunked_linear_attention(q, k, v, lw, *, mode: str, u=None,
+                             state0=None, chunk: int = DEFAULT_CHUNK):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); lw: (B,S,H,dk) log-decay <= 0.
+
+    Returns (out (B,S,H,dv) in q.dtype, final_state (B,H,dk,dv) f32).
+    """
+    assert mode in ("mamba", "rwkv")
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S, SAFE_CHUNK)
+    while S % chunk:  # largest divisor <= requested (trace-time only)
+        chunk -= 1
+    n = S // chunk
+
+    def to_chunks(x):
+        return x.reshape(B, n, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lwc = map(to_chunks, (q, k, v, lw))
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    causal_lower = jnp.tril(jnp.ones((chunk, chunk), bool),
+                            k=0 if mode == "mamba" else -1)
+
+    def body(state, xs):
+        qx, kx, vx, lx = xs                      # (B,C,H,*)
+        lx = jnp.clip(lx.astype(jnp.float32), -LW_MIN, 0.0)
+        W = jnp.cumsum(lx, axis=1)               # inclusive in-chunk log decay
+        qf = qx.astype(jnp.float32)
+        kf = kx.astype(jnp.float32)
+        vf = vx.astype(jnp.float32)
+        if mode == "mamba":
+            q_dec = qf * jnp.exp(W)              # readout after decay+add
+        else:
+            q_dec = qf * jnp.exp(W - lx)         # readout before current step
+        k_dec = kf * jnp.exp(-W)
+        # intra-chunk pairwise terms (lower-triangular (C,C) matmul)
+        A = jnp.einsum("bihk,bjhk->bhij", q_dec, k_dec)
+        A = jnp.where(causal_lower[None, None], A, 0.0)
+        if mode == "rwkv":
+            diag = jnp.einsum("bihk,bihk->bhi", qf, kf * u[None, None])
+            A = A + jax.vmap(jnp.diag)(diag.reshape(-1, chunk)
+                                       ).reshape(B, H, chunk, chunk)
+        out = jnp.einsum("bhij,bjhv->bihv", A, vf)
+        # inter-chunk contribution from carried state
+        out = out + jnp.einsum("bihk,bhkv->bihv", q_dec, state)
+        # state update to end of chunk
+        w_last = W[:, -1][:, None]               # (B,1,H,dk)
+        k_fut = kf * jnp.exp(w_last - W)
+        state = state * jnp.exp(w_last[:, 0])[..., None] + jnp.einsum(
+            "bjhk,bjhv->bhkv", k_fut, vf)
+        return state, out
+
+    state, outc = jax.lax.scan(body, state0, (qc, kc, vc, lwc))
+    out = outc.swapaxes(0, 1).reshape(B, S, H, dv)
+    return out.astype(q.dtype), state
+
+
+def linear_attention_step(q, k, v, lw, *, mode: str, u=None, state=None):
+    """Single-token recurrence for decode. q,k: (B,H,dk); v: (B,H,dv);
+    lw: (B,H,dk).  Returns (out (B,H,dv), new_state (B,H,dk,dv) f32)."""
+    assert mode in ("mamba", "rwkv")
+    B, H, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    lwf = jnp.clip(lw.astype(jnp.float32), -LW_MIN, 0.0)
+    decay = jnp.exp(lwf)[..., None]                       # (B,H,dk,1)
+    if mode == "mamba":
+        state = state * decay + kv
+        out = jnp.einsum("bhk,bhkv->bhv", qf, state)
+    else:
+        read = state + kv * u[None, :, :, None]
+        out = jnp.einsum("bhk,bhkv->bhv", qf, read)
+        state = state * decay + kv
+    return out.astype(q.dtype), state

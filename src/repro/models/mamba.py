@@ -1,0 +1,123 @@
+"""Mamba-2-style SSM head (the parallel-to-attention branch in hymba).
+
+Scalar-per-head decay a_t = -softplus(dt_t + dt_bias) * exp(A_log), state
+size N per head; maps onto the shared chunked linear-attention engine
+(q=C_t, k=dt_t*B_t, v=x_t).  Depthwise causal conv (width 4) on the input
+path, SiLU gate z, per-head skip D.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+from repro.models.linear_attention import (
+    chunked_linear_attention,
+    linear_attention_step,
+)
+
+CONV_W = 4
+
+
+def mamba_heads(d_in: int) -> int:
+    """SSM head count: 16 heads (width d_in/16) when the inner dim is
+    16-divisible, so the head reshape of the TP-sharded d_inner axis is
+    shard-exact.  (A 64-wide-head layout with e.g. 50 heads forces GSPMD
+    to all-gather the 840 MB xz activations every layer — observed 80 GB
+    per step on hymba train_4k.)  Mamba-2-style scalar-per-head decay is
+    head-width agnostic."""
+    return 16 if d_in % 16 == 0 else max(1, d_in // 64)
+
+
+def init_mamba(key, d_model: int, ssm_state: int, expand: int):
+    d_in = expand * d_model
+    n_heads = mamba_heads(d_in)
+    ks = jax.random.split(key, 8)
+    params = {
+        "wx": _dense_init(ks[0], (d_model, d_in)),
+        "wz": _dense_init(ks[1], (d_model, d_in)),
+        "conv_w": _dense_init(ks[2], (CONV_W, d_in), in_axis=0) * 0.5,
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "wB": _dense_init(ks[3], (d_in, ssm_state)),
+        "wC": _dense_init(ks[4], (d_in, ssm_state)),
+        "wdt": _dense_init(ks[5], (d_in, n_heads)),
+        "dt_bias": jnp.full((n_heads,), -1.0, jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "wo": _dense_init(ks[6], (d_in, d_model)),
+    }
+    logical = {
+        "wx": (None, "d_inner"),
+        "wz": (None, "d_inner"),
+        "conv_w": (None, "d_inner"),
+        "conv_b": ("d_inner",),
+        "wB": ("d_inner", None),
+        "wC": ("d_inner", None),
+        "wdt": ("d_inner", None),
+        "dt_bias": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "wo": ("d_inner", None),
+    }
+    return params, logical
+
+
+def _causal_conv(xi, w, b):
+    """Depthwise causal conv width 4 via shifted adds. xi: (B,S,d_in)."""
+    out = xi * w[-1]
+    for i in range(1, CONV_W):
+        shifted = jnp.pad(xi, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[CONV_W - 1 - i]
+    return out + b
+
+
+def _ssm_inputs(p, xc, dtype):
+    """Shared projection math. xc: (..., S, d_in) post-conv activations."""
+    n_heads = p["wdt"].shape[1]
+    N = p["wB"].shape[1]
+    Bt = jnp.einsum("bsd,dn->bsn", xc, p["wB"].astype(dtype))
+    Ct = jnp.einsum("bsd,dn->bsn", xc, p["wC"].astype(dtype))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xc, p["wdt"].astype(dtype)).astype(jnp.float32)
+        + p["dt_bias"])
+    lw = -dt * jnp.exp(p["A_log"])                       # (B,S,H) log decay
+    q = jnp.broadcast_to(Ct[:, :, None, :], (*dt.shape, N))
+    k = Bt[:, :, None, :] * dt[..., None].astype(dtype)
+    B_, S = xc.shape[0], xc.shape[1]
+    v = xc.reshape(B_, S, n_heads, -1)
+    lw_full = jnp.broadcast_to(lw[..., None], (*dt.shape, N))
+    return q, k.astype(dtype), v, lw_full
+
+
+def mamba_apply(p, x, chunk: int = 32):
+    """x: (B,S,d) -> (B,S,d). Full-sequence (train/prefill) path."""
+    dt_ = x.dtype
+    B, S, d = x.shape
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+    xc = jax.nn.silu(_causal_conv(xi, p["conv_w"].astype(dt_),
+                                  p["conv_b"].astype(dt_)))
+    q, k, v, lw = _ssm_inputs(p, xc, dt_)
+    y, state = chunked_linear_attention(q, k, v, lw, mode="mamba", chunk=chunk)
+    y = y + v * p["D"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B, S, -1) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_))
+    return out, state, xi[:, -(CONV_W - 1):]             # conv tail as state
+
+
+def mamba_decode_step(p, x, conv_state, ssm_state):
+    """x: (B,1,d); conv_state: (B,3,d_in); ssm_state: (B,H,N,hd)."""
+    dt_ = x.dtype
+    B = x.shape[0]
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_))
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_))
+    window = jnp.concatenate([conv_state, xi], axis=1)   # (B,4,d_in)
+    xc = jnp.einsum("btd,td->bd", window, p["conv_w"].astype(dt_))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt_))[:, None]  # (B,1,d_in)
+    q, k, v, lw = _ssm_inputs(p, xc, dt_)
+    y, ssm_state = linear_attention_step(
+        q[:, 0], k[:, 0], v[:, 0], lw[:, 0], mode="mamba", state=ssm_state)
+    y = y + v[:, 0] * p["D"].astype(dt_)[None, :, None]
+    y = y.reshape(B, 1, -1) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_))
+    return out, window[:, 1:], ssm_state

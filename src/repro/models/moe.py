@@ -1,0 +1,123 @@
+"""Mixture-of-Experts: top-k routing with GShard-style dispatch einsums.
+
+Expert parallelism under a fixed (data, model) mesh: expert weights are
+stored in a *virtual-expert* layout — each real expert's gated-MLP is
+split column-wise into `split` virtual experts (SwiGLU decomposes exactly:
+out = sum_h (silu(x Wg_h) * (x Wi_h)) Wo_h) so that E_virtual = E * split
+divides the model-axis size (mixtral: 8e x split 2 = 16; phi-3.5: 16e x 1).
+A token routed to real expert e is dispatched to all of e's virtual
+experts with the same gate weight.
+
+Sharding: activations are batch-sharded and model-replicated, so the
+dispatch one-hots and per-expert buffers shard over ("batch", "expert")
+with *local* dispatch contraction; the only collective is the all-reduce
+of the combined output over the model axis (same pattern as TP attention).
+moe_mode="tp" instead shards the ffn dim (Megatron-style) — §Perf
+comparison point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, split: int):
+    ev = num_experts * split
+    fv = d_ff // split
+    ks = jax.random.split(key, 4)
+    params = {
+        "router": _dense_init(ks[0], (d_model, num_experts)),
+        "wi": _dense_init(ks[1], (ev, d_model, fv), in_axis=1),
+        "wg": _dense_init(ks[2], (ev, d_model, fv), in_axis=1),
+        "wo": _dense_init(ks[3], (ev, fv, d_model), in_axis=1),
+    }
+    logical = {
+        "router": (None, None),
+        "wi": ("expert", None, "expert_ffn"),
+        "wg": ("expert", None, "expert_ffn"),
+        "wo": ("expert", "expert_ffn", None),
+    }
+    return params, logical
+
+
+def _topk_by_argmax(logits, k: int):
+    """(..., E) -> (vals (..., k), idx (..., k)); descending, stable."""
+    vals, idxs = [], []
+    cur = logits
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.max(cur, axis=-1)
+        vals.append(v)
+        idxs.append(i)
+        sel = jax.nn.one_hot(i, logits.shape[-1], dtype=jnp.float32) > 0
+        cur = jnp.where(sel, -jnp.inf, cur)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_apply(p, x, *, num_experts: int, top_k: int, split: int,
+              capacity_factor: float, rules=None, group_size: int = 512):
+    """x: (B,S,d) -> (B,S,d), aux-loss dict."""
+    B, S, d = x.shape
+    ev = num_experts * split
+    kv = top_k * split  # virtual choices per token
+    N = B * S
+
+    # ---- routing over *real* experts --------------------------------------
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    # iterated-argmax top-k: jax.lax.top_k lowers to a sort that GSPMD
+    # replicates (observed: per-layer all-gather of the full router
+    # logits); argmax+mask partitions cleanly over batch.
+    gate_vals, gate_idx = _topk_by_argmax(logits, top_k)        # (B,S,k)
+    gate_w = jax.nn.softmax(gate_vals, axis=-1)                 # renormalized
+    # Switch-style load-balance aux loss
+    probs = jax.nn.softmax(logits, axis=-1)
+    sel_real = jax.nn.one_hot(gate_idx, num_experts,
+                              dtype=jnp.float32).sum(axis=2)    # (B,S,E)
+    aux_loss = num_experts * jnp.sum(
+        probs.mean(axis=(0, 1)) * sel_real.mean(axis=(0, 1)) / top_k)
+
+    # ---- virtual-expert selection and gates, per token ---------------------
+    v_idx = gate_idx[..., None] * split + jnp.arange(split)     # (B,S,k,split)
+    v_oh = jax.nn.one_hot(v_idx.reshape(B, S, kv), ev, dtype=jnp.float32)
+    sel = v_oh.sum(axis=2)                                      # (B,S,Ev) 0/1
+    gates = jnp.einsum("bske,bsk->bse", v_oh,
+                       jnp.repeat(gate_w, split, axis=-1))      # (B,S,Ev)
+
+    # ---- group tokens, assign capacity positions ---------------------------
+    T = min(group_size, N)
+    G = N // T
+    assert N % T == 0, (N, T)
+    sel = sel.reshape(G, T, ev)
+    gates = gates.reshape(G, T, ev)
+    cap = int(capacity_factor * kv * T / ev)
+    cap = max(4, ((cap + 3) // 4) * 4)
+    pos = jnp.cumsum(sel, axis=1) - sel                         # exclusive
+    keep = sel * (pos < cap).astype(sel.dtype)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=x.dtype)
+    disp = pos_oh * keep[..., None].astype(x.dtype)             # (G,T,Ev,C)
+    combine = disp * gates[..., None].astype(x.dtype)
+    if rules is not None:
+        from jax.lax import with_sharding_constraint as wsc
+        disp = wsc(disp, rules.named(("batch", None, "expert", None)))
+        combine = wsc(combine, rules.named(("batch", None, "expert", None)))
+
+    # ---- dispatch -> expert MLP -> combine ----------------------------------
+    xg = x.reshape(G, T, d)
+    xin = jnp.einsum("gtec,gtd->gecd", disp, xg)                # local per shard
+    if rules is not None:
+        # pin the per-expert buffers to the expert (model) shards: without
+        # this, small-token cells (decode) tempt GSPMD into all-gathering
+        # the expert WEIGHTS per layer instead (observed: ~78 GB/step)
+        from jax.lax import with_sharding_constraint as wsc
+        xin = wsc(xin, rules.named(("batch", "expert", None, None)))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["wg"].astype(x.dtype)))
+    u = jnp.einsum("gecd,edf->gecf", xin, p["wi"].astype(x.dtype))
+    yout = jnp.einsum("gecf,efd->gecd", h * u, p["wo"].astype(x.dtype))
+    if rules is not None:
+        from jax.lax import with_sharding_constraint as wsc
+        yout = wsc(yout, rules.named(("batch", "expert", None, None)))
+    y = jnp.einsum("gtec,gecd->gtd", combine, yout)             # all-reduce(model)
+    return y.reshape(B, S, d), {"moe_aux": aux_loss}

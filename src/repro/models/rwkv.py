@@ -1,0 +1,148 @@
+"""RWKV-6 (Finch): attention-free time-mix with data-dependent per-channel
+decay, plus squared-ReLU channel-mix.
+
+Faithfulness notes (DESIGN.md §2): the data-dependent decay LoRA
+(w = exp(-exp(w0 + tanh(x_w A) B))) — Finch's hallmark — is implemented;
+the token-shift interpolations use learned static coefficients (RWKV-5
+style) rather than Finch's additional per-token LoRA mixes, which changes
+no systems behaviour (same shapes, same state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, head_rms_norm
+from repro.models.linear_attention import (
+    chunked_linear_attention,
+    linear_attention_step,
+)
+
+DECAY_LORA = 64
+
+
+def init_rwkv_time_mix(key, d_model: int, n_heads: int, head_dim: int):
+    ks = jax.random.split(key, 8)
+    params = {
+        # token-shift lerp coefficients for r,k,v,g,w
+        "mu": jnp.full((5, d_model), 0.5, jnp.float32),
+        "wr": _dense_init(ks[0], (d_model, n_heads, head_dim)),
+        "wk": _dense_init(ks[1], (d_model, n_heads, head_dim)),
+        "wv": _dense_init(ks[2], (d_model, n_heads, head_dim)),
+        "wg": _dense_init(ks[3], (d_model, n_heads, head_dim)),
+        "wo": _dense_init(ks[4], (n_heads, head_dim, d_model), in_axis=0),
+        # data-dependent decay lora: lw = -exp(w0 + tanh(x A) B)
+        "w0": jnp.full((n_heads, head_dim), -0.6, jnp.float32),
+        "wA": _dense_init(ks[5], (d_model, DECAY_LORA)),
+        "wB": _dense_init(ks[6], (DECAY_LORA, n_heads, head_dim)) * 0.1,
+        # per-channel bonus for the current token ("time_faaaa")
+        "u": jnp.full((n_heads, head_dim), 0.5, jnp.float32),
+    }
+    logical = {
+        "mu": (None, None),
+        "wr": (None, "heads", None),
+        "wk": (None, "heads", None),
+        "wv": (None, "heads", None),
+        "wg": (None, "heads", None),
+        "wo": ("heads", None, None),
+        "w0": ("heads", None),
+        "wA": (None, None),
+        "wB": (None, "heads", None),
+        "u": ("heads", None),
+    }
+    return params, logical
+
+
+def init_rwkv_channel_mix(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    params = {
+        "mu_ck": jnp.full((d_model,), 0.5, jnp.float32),
+        "mu_cr": jnp.full((d_model,), 0.5, jnp.float32),
+        "wck": _dense_init(ks[0], (d_model, d_ff)),
+        "wcv": _dense_init(ks[1], (d_ff, d_model)),
+        "wcr": _dense_init(ks[2], (d_model, d_model)),
+    }
+    logical = {
+        "mu_ck": (None,),
+        "mu_cr": (None,),
+        "wck": (None, "ffn"),
+        "wcv": ("ffn", None),
+        "wcr": (None, None),
+    }
+    return params, logical
+
+
+def _lerp(x, xprev, mu):
+    return x + (xprev - x) * mu.astype(x.dtype)
+
+
+def _time_mix_projections(p, x, xprev):
+    dt = x.dtype
+    mu = p["mu"]
+    r = jnp.einsum("bsd,dhk->bshk", _lerp(x, xprev, mu[0]), p["wr"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", _lerp(x, xprev, mu[1]), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", _lerp(x, xprev, mu[2]), p["wv"].astype(dt))
+    g = jnp.einsum("bsd,dhk->bshk", _lerp(x, xprev, mu[3]), p["wg"].astype(dt))
+    xw = _lerp(x, xprev, mu[4])
+    lora = jnp.einsum("bsl,lhk->bshk",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["wA"].astype(dt))),
+                      p["wB"].astype(dt))
+    lw = -jnp.exp(jnp.clip(p["w0"] + lora.astype(jnp.float32), -8.0, 4.0))
+    return r, k, v, g, lw
+
+
+def rwkv_time_mix(p, x, chunk: int = 32, mask=None):
+    """x: (B,S,d) -> (B,S,d), final la-state, shift-state (B,d).
+
+    `mask` (H_pad,) zeroes TP-padding heads exactly (see attention.head_mask).
+    """
+    dt = x.dtype
+    B, S, d = x.shape
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, g, lw = _time_mix_projections(p, x, xprev)
+    y, state = chunked_linear_attention(
+        r, k, v, lw, mode="rwkv", u=p["u"].astype(jnp.float32), chunk=chunk)
+    y = head_rms_norm(y) * jax.nn.silu(g)
+    if mask is not None:
+        y = y * mask[None, None, :, None].astype(y.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(dt))
+    return out, state, x[:, -1]
+
+
+def rwkv_time_mix_step(p, x, la_state, shift_state, mask=None):
+    """x: (B,1,d); la_state: (B,H,dk,dv) f32; shift_state: (B,d)."""
+    dt = x.dtype
+    B = x.shape[0]
+    xprev = shift_state[:, None].astype(dt)
+    r, k, v, g, lw = _time_mix_projections(p, x, xprev)
+    y, la_state = linear_attention_step(
+        r[:, 0], k[:, 0], v[:, 0], lw[:, 0], mode="rwkv",
+        u=p["u"].astype(jnp.float32), state=la_state)
+    y = head_rms_norm(y[:, None]) * jax.nn.silu(g)
+    if mask is not None:
+        y = y * mask[None, None, :, None].astype(y.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(dt))
+    return out, la_state, x[:, 0]
+
+
+def rwkv_channel_mix(p, x):
+    """x: (B,S,d) -> (B,S,d), shift-state (B,d)."""
+    dt = x.dtype
+    xprev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    kx = _lerp(x, xprev, p["mu_ck"])
+    rx = _lerp(x, xprev, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", kx, p["wck"].astype(dt))))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wcv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", rx, p["wcr"].astype(dt)))
+    return rr * vv, x[:, -1]
+
+
+def rwkv_channel_mix_step(p, x, shift_state):
+    dt = x.dtype
+    xprev = shift_state[:, None].astype(dt)
+    kx = _lerp(x, xprev, p["mu_ck"])
+    rx = _lerp(x, xprev, p["mu_cr"])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", kx, p["wck"].astype(dt))))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wcv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", rx, p["wcr"].astype(dt)))
+    return rr * vv, x[:, 0]

@@ -1,0 +1,64 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule, pure JAX.
+
+ZeRO-1: the optimizer moments live in *upper-half* state with their own
+logical sharding (param spec + one extra dim over "data" — see
+sharding.zero1_shard), so m/v are distributed over the data axis while
+params stay TP-sharded/DP-replicated.  GSPMD inserts the gather/scatter
+around the elementwise update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(step, base_lr: float, warmup: int = 100,
+                total: int = 10_000, min_frac: float = 0.1):
+    step_f = step.astype(jnp.float32)
+    warm = (step_f + 1.0) / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step_f - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.minimum(warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params, grads, opt_state, *, lr, beta1=0.9, beta2=0.95,
+                  eps=1e-8, weight_decay=0.1, grad_clip=1.0):
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    c1 = 1.0 - beta1 ** count.astype(jnp.float32)
+    c2 = 1.0 - beta2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = beta1 * m + (1 - beta1) * g
+        v = beta2 * v + (1 - beta2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p - lr * step).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, gnorm

@@ -1,0 +1,7 @@
+from repro.sharding.rules import (  # noqa: F401
+    ShardingRules,
+    batch_axes,
+    logical_to_physical,
+    zero1_shard,
+    make_rules,
+)

@@ -1,0 +1,10 @@
+from repro.training.step import (  # noqa: F401
+    make_train_step,
+    make_serve_steps,
+    init_train_state,
+    abstract_params,
+    abstract_train_state,
+    train_state_specs,
+    batch_specs,
+    decode_state_specs,
+)

@@ -1,0 +1,139 @@
+"""train_step / serve_step factories plus state shape/sharding assembly.
+
+The returned step functions are pure (state, batch) -> state transitions
+over plain pytrees, so the MANA runtime can interpose on *dispatch* (the
+hybrid-2PC safe point) without touching model code — the JAX analogue of
+MANA wrapping MPI calls rather than the application.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.sharding.rules import ShardingRules, zero1_shard
+
+
+def init_train_state(cfg: ModelConfig, rc: RunConfig, key) -> Dict:
+    """Upper-half training state: params + moments + step counter."""
+    params, _ = T.init_params(cfg, key)
+    return {"params": params, "opt": adamw.init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical-axes tree) — no allocation.
+
+    The logical tree is static Python built during tracing, captured via
+    a side channel (eval_shape outputs must be arrays).
+    """
+    holder = {}
+
+    def f(k):
+        p, lg = T.init_params(cfg, k)
+        holder["lg"] = lg
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, holder["lg"]
+
+
+def abstract_train_state(cfg: ModelConfig, rc: RunConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: init_train_state(cfg, rc, k), key)
+
+
+def train_state_specs(cfg: ModelConfig, rc: RunConfig, rules: ShardingRules):
+    """PartitionSpecs for the full train state (ZeRO-1 moments included)."""
+    from jax.sharding import PartitionSpec as P
+    PSpec = P
+
+    shapes, logical = abstract_params(cfg)
+    is_lg = lambda x: isinstance(x, tuple)
+    p_specs = jax.tree.map(lambda lg, s: rules.spec(lg, s.shape),
+                           logical, shapes, is_leaf=is_lg)
+    if rc.fsdp:
+        # ZeRO-3: params (and hence grads) also sharded over the data
+        # axis; GSPMD all-gathers per layer inside the scan and
+        # reduce-scatters the grads
+        p_specs = jax.tree.map(
+            lambda sp, s: zero1_shard(sp, s.shape, rules.mesh),
+            p_specs, shapes, is_leaf=lambda x: isinstance(x, PSpec))
+    if rc.zero1:
+        mv_specs = jax.tree.map(
+            lambda sp, s: zero1_shard(sp, s.shape, rules.mesh),
+            p_specs, shapes, is_leaf=lambda x: isinstance(x, P))
+    else:
+        mv_specs = p_specs
+    return {"params": p_specs,
+            "opt": {"m": mv_specs, "v": mv_specs, "count": P()},
+            "step": P()}
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    """Shape-aware: batch dims that do not divide the DP axes (e.g. the
+    long_500k single sequence) are replicated."""
+    B = shape.global_batch
+    if shape.kind == "decode":
+        return {"tokens": rules.spec(("batch", None), (B, 1))}
+    S = shape.seq_len
+    specs = {"tokens": rules.spec(("batch", None), (B, S)),
+             "labels": rules.spec(("batch", None), (B, S))}
+    if cfg.enc_dec:
+        specs["frames"] = rules.spec(("batch", None, None),
+                                     (B, cfg.enc_positions, cfg.d_model))
+    if cfg.cross_attn_every:
+        specs["patches"] = rules.spec(("batch", None, None),
+                                      (B, cfg.vision_tokens, cfg.d_model))
+    if shape.kind == "prefill":
+        specs.pop("labels")
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, rc: RunConfig, rules: ShardingRules,
+                       shape: ShapeConfig):
+    from repro.configs.base import RunConfig as _RC
+    lg = T.decode_state_logical(cfg)
+    shapes = jax.eval_shape(lambda: T.init_decode_state(cfg, shape, rc))
+    return jax.tree.map(lambda l, s: rules.spec(l, s.shape), lg, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, rc: RunConfig, rules: ShardingRules):
+    assert rc.grad_accum == 1, "grad accumulation wired via microbatch loop"
+
+    def train_step(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+
+        def loss_fn(p):
+            return T.forward_loss(p, cfg, rc, rules, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = adamw.lr_schedule(step, rc.lr)
+        new_params, new_opt, gnorm = adamw.apply_updates(
+            params, grads, opt, lr=lr, beta1=rc.beta1, beta2=rc.beta2,
+            weight_decay=rc.weight_decay, grad_clip=rc.grad_clip)
+        out_metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **metrics}
+        return ({"params": new_params, "opt": new_opt, "step": step + 1},
+                out_metrics)
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig, rc: RunConfig, rules: ShardingRules):
+    def prefill_step(params, batch):
+        return T.prefill(params, cfg, rc, rules, batch)
+
+    def serve_step(params, state, token):
+        return T.decode_step(params, cfg, rc, rules, state, token)
+
+    return prefill_step, serve_step

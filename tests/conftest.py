@@ -1,0 +1,16 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here — smoke tests and benchmarks must see 1 device.
+# Multi-device tests (elastic restart, dry-run) spawn subprocesses that
+# set --xla_force_host_platform_device_count themselves.
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

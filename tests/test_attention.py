@@ -1,0 +1,195 @@
+"""Flash/SWA attention vs naive reference; decode-vs-prefill equivalence;
+TP head-padding exactness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def naive_attention(q, k, v, causal, window=0):
+    """O(S^2) reference with explicit masking. q:(B,S,H,hd) k,v:(B,T,K,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    s = np.einsum("bskgh,btkh->bskgt", np.asarray(qg, np.float32),
+                  np.asarray(k, np.float32)) / np.sqrt(hd)
+    if causal:
+        qpos = np.arange(S)[:, None]
+        tpos = np.arange(T)[None, :]
+        mask = qpos >= tpos
+        if window:
+            mask &= (qpos - tpos) < window
+        s = np.where(mask[None, :, None, None, :], s, -1e9)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bskgt,btkh->bskgh", p, np.asarray(v, np.float32))
+    return o.reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("S,H,K,hd,chunk", [
+    (64, 4, 4, 16, 16), (64, 8, 2, 8, 32), (96, 6, 2, 16, 24),
+    (64, 4, 1, 32, 64),
+])
+def test_flash_causal_matches_naive(S, H, K, hd, chunk):
+    rng = np.random.RandomState(0)
+    q = rng.randn(2, S, H, hd).astype(np.float32)
+    k = rng.randn(2, S, K, hd).astype(np.float32)
+    v = rng.randn(2, S, K, hd).astype(np.float32)
+    out = A.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=True, chunk=chunk)
+    ref = naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_noncausal_cross():
+    rng = np.random.RandomState(1)
+    q = rng.randn(2, 32, 4, 16).astype(np.float32)
+    k = rng.randn(2, 48, 4, 16).astype(np.float32)  # T != S (cross attn)
+    v = rng.randn(2, 48, 4, 16).astype(np.float32)
+    out = A.flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=False, chunk=16)
+    ref = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window,chunk", [(16, 16), (32, 8), (8, 32)])
+def test_swa_matches_naive(window, chunk):
+    rng = np.random.RandomState(2)
+    S, H, K, hd = 64, 4, 2, 16
+    q = rng.randn(2, S, H, hd).astype(np.float32)
+    k = rng.randn(2, S, K, hd).astype(np.float32)
+    v = rng.randn(2, S, K, hd).astype(np.float32)
+    out = A.sliding_window_attention(jnp.asarray(q), jnp.asarray(k),
+                                     jnp.asarray(v), window=window,
+                                     chunk=chunk)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_backward_matches_naive_grad():
+    """The custom VJP must agree with AD through the naive version."""
+    rng = np.random.RandomState(3)
+    S, H, K, hd = 32, 4, 2, 8
+    q = jnp.asarray(rng.randn(1, S, H, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(1, S, K, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(1, S, K, hd), jnp.float32)
+
+    def naive_jnp(q, k, v):
+        B, S, H, hd = q.shape
+        K = k.shape[2]
+        qg = q.reshape(B, S, K, H // K, hd) / jnp.sqrt(1.0 * hd)
+        s = jnp.einsum("bskgh,btkh->bskgt", qg, k)
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e9)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bskgt,btkh->bskgh", p, v)
+        return o.reshape(B, S, H, hd)
+
+    f_flash = lambda q, k, v: (A.flash_attention(
+        q, k, v, causal=True, chunk=8) ** 2).sum()
+    f_naive = lambda q, k, v: (naive_jnp(q, k, v) ** 2).sum()
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_swa_backward_matches_ad():
+    rng = np.random.RandomState(4)
+    S, H, K, hd, W = 32, 2, 2, 8, 8
+    q = jnp.asarray(rng.randn(1, S, H, hd), jnp.float32)
+    k = jnp.asarray(rng.randn(1, S, K, hd), jnp.float32)
+    v = jnp.asarray(rng.randn(1, S, K, hd), jnp.float32)
+
+    def naive_jnp(q, k, v):
+        B, S, H, hd = q.shape
+        K = k.shape[2]
+        qg = q.reshape(B, S, K, H // K, hd) / jnp.sqrt(1.0 * hd)
+        s = jnp.einsum("bskgh,btkh->bskgt", qg, k)
+        d = jnp.arange(S)[:, None] - jnp.arange(S)[None, :]
+        mask = (d >= 0) & (d < W)
+        s = jnp.where(mask[None, :, None, None, :], s, -1e9)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bskgt,btkh->bskgh", p, v).reshape(B, S, H, hd)
+
+    f1 = lambda q, k, v: (A.sliding_window_attention(
+        q, k, v, window=W, chunk=8) ** 2).sum()
+    f2 = lambda q, k, v: (naive_jnp(q, k, v) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_decode_ring_buffer_matches_full_cache():
+    """SWA ring-buffer decode == full-cache decode restricted to window."""
+    rng = np.random.RandomState(5)
+    B, H, K, hd, W = 2, 4, 2, 8, 8
+    T = 4 * W
+    ks = rng.randn(B, T, K, hd).astype(np.float32)
+    vs = rng.randn(B, T, K, hd).astype(np.float32)
+    q = jnp.asarray(rng.randn(B, 1, H, hd), np.float32)
+    pos = T - 1
+    # ring cache: slot p % W holds position p for p in [T-W, T)
+    ring_k = np.zeros((B, W, K, hd), np.float32)
+    ring_v = np.zeros((B, W, K, hd), np.float32)
+    for p in range(T - W, T):
+        ring_k[:, p % W] = ks[:, p]
+        ring_v[:, p % W] = vs[:, p]
+    out_ring = A.decode_attention(q, jnp.asarray(ring_k), jnp.asarray(ring_v),
+                                  pos, window=W)
+    # reference: naive over the last W positions
+    ref = naive_attention(np.asarray(q), ks[:, -W:], vs[:, -W:], causal=False)
+    np.testing.assert_allclose(np.asarray(out_ring)[:, 0], ref[:, 0],
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_head_padding_is_exact():
+    """A model with padded heads must produce identical attention output
+    to the unpadded layout (masking removes dummy-head contributions)."""
+    from repro.configs import ARCHS, reduced_config
+
+    base = reduced_config(ARCHS["qwen2-0.5b"], n_heads=3, n_kv_heads=1,
+                          d_model=48, pad_to=1)
+    padded = dataclasses.replace(base, pad_to=4)
+    assert padded.n_heads_padded == 4 and base.n_heads_padded == 3
+    rng = np.random.RandomState(6)
+    x = jnp.asarray(rng.randn(2, 16, 48), jnp.float32)
+    pos = jnp.arange(16)
+
+    from repro.models.attention import (head_mask, init_attention, out_proj,
+                                        qkv_proj, flash_attention)
+
+    p_small, _ = init_attention(jax.random.PRNGKey(0), 48, 3, 1, 16, True)
+    p_big, _ = init_attention(jax.random.PRNGKey(1), 48, 4, 1, 16, True)
+    # copy the real heads' weights into the padded layout
+    p_big = dict(p_big)
+    for name, axis in [("wq", 1), ("bq", 0)]:
+        arr = np.asarray(p_big[name]).copy()
+        small = np.asarray(p_small[name])
+        sl = [slice(None)] * arr.ndim
+        sl[axis] = slice(0, 3)
+        arr[tuple(sl)] = small
+        p_big[name] = jnp.asarray(arr)
+    wo = np.asarray(p_big["wo"]).copy()
+    wo[:3] = np.asarray(p_small["wo"])
+    p_big["wo"] = jnp.asarray(wo)
+    for name in ("wk", "wv", "bk", "bv"):
+        p_big[name] = p_small[name]
+
+    def run(p, cfg):
+        q, k, v = qkv_proj(p, x, 10_000.0, pos)
+        o = flash_attention(q, k, v, causal=True, chunk=8)
+        o = o * head_mask(cfg)[None, None, :, None]
+        return out_proj(p, o)
+
+    np.testing.assert_allclose(np.asarray(run(p_small, base)),
+                               np.asarray(run(p_big, padded)),
+                               rtol=1e-4, atol=1e-5)

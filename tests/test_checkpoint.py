@@ -1,0 +1,100 @@
+"""CheckpointManager: roundtrip, integrity, encodings, GC, async."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.checkpoint import CheckpointError, CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.RandomState(seed)
+    return {
+        "params": {"w": rng.randn(64, 32).astype(np.float32),
+                   "b": rng.randn(32).astype(np.float32)},
+        "opt": {"m": {"w": rng.randn(64, 32).astype(np.float32),
+                      "b": rng.randn(32).astype(np.float32)},
+                "v": {"w": np.abs(rng.randn(64, 32)).astype(np.float32),
+                      "b": np.abs(rng.randn(32)).astype(np.float32)},
+                "count": np.int32(7)},
+        "step": np.int32(7),
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(7, tree, extra={"data": {"seed": 0, "step": 7}})
+    out, extra = mgr.restore()
+    assert extra["data"]["step"] == 7
+    np.testing.assert_array_equal(out["params"]["w"], tree["params"]["w"])
+    np.testing.assert_array_equal(out["opt"]["v"]["b"], tree["opt"]["v"]["b"])
+    assert int(out["step"]) == 7
+
+
+def test_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    d = mgr.step_dir(1)
+    target = [f for f in os.listdir(d) if f.startswith("params.w")][0]
+    path = os.path.join(d, target)
+    raw = bytearray(open(path, "rb").read())
+    raw[100] ^= 0xFF
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(CheckpointError, match="checksum"):
+        mgr.restore(1)
+
+
+def test_quantized_moments_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), quantize_keys=("opt/m", "opt/v"))
+    tree = _tree()
+    stats = mgr.save(1, tree)
+    out, _ = mgr.restore(1)
+    # params exact, moments within int8 block quantization error
+    np.testing.assert_array_equal(out["params"]["w"], tree["params"]["w"])
+    m, m0 = out["opt"]["m"]["w"], tree["opt"]["m"]["w"]
+    scale = np.abs(m0).max() / 127
+    assert np.abs(m - m0).max() <= scale * 0.51 + 1e-7
+    # and the checkpoint actually shrank
+    raw = CheckpointManager(str(tmp_path) + "2")
+    s2 = raw.save(1, tree)
+    assert stats["bytes"] < s2["bytes"]
+
+
+def test_delta_encoding_roundtrip_and_gc_protection(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), delta_keys=("params",), keep=2)
+    t1 = _tree(1)
+    mgr.save(1, t1)
+    t2 = {**t1, "params": {"w": t1["params"]["w"] + 1,
+                           "b": t1["params"]["b"]}}
+    mgr.save(2, t2)
+    out, _ = mgr.restore(2)
+    np.testing.assert_array_equal(out["params"]["w"], t2["params"]["w"])
+    np.testing.assert_array_equal(out["params"]["b"], t2["params"]["b"])
+    # base of the newest delta is protected from GC
+    mgr.save(3, t2)
+    mgr.save(4, t2)
+    assert 1 in mgr.steps() or all(
+        "base_step" not in e
+        for e in mgr._manifest(mgr.step_dir(mgr.latest_step()))["arrays"].values())
+
+
+def test_gc_keeps_last_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    for s in range(1, 8):
+        mgr.save(s, {"x": np.arange(s, dtype=np.float32)})
+    assert mgr.steps() == [5, 6, 7]
+
+
+def test_async_save_overlaps(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    fut = mgr.save_async(1, _tree())
+    stats = fut.result()
+    assert stats["bytes"] > 0
+    assert mgr.latest_step() == 1
+
+
+def test_restore_missing_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(CheckpointError):
+        mgr.restore()

@@ -1,0 +1,97 @@
+"""Per-kernel validation (deliverable c): shape/dtype sweeps, Pallas
+kernel (interpret mode) vs pure-jnp oracle vs numpy host twin."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.checksum import ops as cops
+from repro.kernels.checksum import ref as cref
+from repro.kernels.delta import ops as dops
+from repro.kernels.delta import ref as dref
+from repro.kernels.quantize import ops as qops
+from repro.kernels.quantize import ref as qref
+
+SHAPES = [(8,), (127,), (33, 65), (4, 8, 16), (2048,), (3, 2048)]
+DTYPES = [np.float32, np.float16, np.int32, np.uint8]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_checksum_kernel_matches_oracle(shape, dtype):
+    rng = np.random.RandomState(hash((shape, str(dtype))) % 2**31)
+    if np.issubdtype(dtype, np.floating):
+        x = rng.randn(*shape).astype(dtype)
+    else:
+        x = rng.randint(0, 100, shape).astype(dtype)
+    k = int(cops.checksum(jnp.asarray(x), use_kernel=True))
+    r = int(cref.checksum_ref(jnp.asarray(x)))
+    n = cref.checksum_np(x)
+    assert k == r == n
+
+
+def test_checksum_detects_corruption():
+    x = np.arange(10000, dtype=np.float32)
+    a = cref.checksum_np(x)
+    x[1234] += 1e-4
+    assert cref.checksum_np(x) != a
+
+
+@pytest.mark.parametrize("shape", [(1024,), (5000,), (16, 1024), (7, 333)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_quantize_kernel_matches_oracle(shape, dtype):
+    rng = np.random.RandomState(0)
+    x = (rng.randn(*shape) * 10).astype(dtype)
+    q1, s1 = qops.quantize(jnp.asarray(x), use_kernel=True)
+    blocks, _ = qref.pad_to_blocks(jnp.asarray(x))
+    q2, s2 = qref.quantize_ref(blocks)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    # roundtrip error bounded by scale/2 per block
+    deq = np.asarray(qops.dequantize(q1, s1)).ravel()[:x.size]
+    scale_per_elem = np.repeat(np.asarray(s1).ravel(),
+                               qref.QBLOCK)[:x.size]
+    assert (np.abs(deq - x.ravel().astype(np.float32))
+            <= scale_per_elem * 0.5 + 1e-7).all()
+
+
+def test_quantize_np_twin_matches_jnp():
+    x = np.random.RandomState(1).randn(777).astype(np.float32)
+    qn, sn, pad = qref.quantize_np(x)
+    qj, sj = qref.quantize_ref(qref.pad_to_blocks(jnp.asarray(x))[0])
+    np.testing.assert_array_equal(qn, np.asarray(qj))
+    out = qref.dequantize_np(qn, sn, pad, x.shape, x.dtype)
+    assert out.shape == x.shape
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16, np.int32])
+def test_delta_kernel_roundtrip(dtype):
+    rng = np.random.RandomState(2)
+    prev = (rng.randn(3, 2048) * 5).astype(dtype)
+    cur = prev.copy()
+    cur[1, ::7] += np.asarray(1, dtype)
+    d_kernel = np.asarray(dops.delta(jnp.asarray(cur), jnp.asarray(prev),
+                                     use_kernel=True))
+    d_ref = np.asarray(dref.delta_ref(jnp.asarray(cur), jnp.asarray(prev)))
+    np.testing.assert_array_equal(d_kernel, d_ref)
+    # host-side apply restores exactly
+    d_np = dref.delta_np(cur, prev)
+    back = dref.apply_np(prev, d_np, cur.shape, cur.dtype)
+    np.testing.assert_array_equal(back, cur)
+    # identical arrays -> all-zero delta
+    z = dref.delta_np(prev, prev)
+    assert not z.any()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4000), st.integers(0, 2**31 - 1))
+def test_checksum_property_any_length(n, seed):
+    """Checksum is deterministic and single-bit sensitive at any length."""
+    rng = np.random.RandomState(seed % 2**31)
+    x = rng.randint(0, 256, n).astype(np.uint8)
+    a = cref.checksum_np(x)
+    assert a == cref.checksum_np(x.copy())
+    y = x.copy()
+    y[rng.randint(n)] ^= 1
+    assert cref.checksum_np(y) != a

@@ -1,0 +1,99 @@
+"""Chunked linear attention (rwkv/mamba engine) vs the naive recurrence,
+including a hypothesis property sweep over shapes/decays/chunk sizes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.linear_attention import (LW_MIN, chunked_linear_attention,
+                                           linear_attention_step)
+
+
+def naive(q, k, v, lw, mode, u=None, state=None):
+    """Step-by-step recurrence in float64."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    S_ = np.zeros((B, H, dk, dv)) if state is None else state.copy()
+    out = np.zeros((B, S, H, dv))
+    lw = np.clip(lw, -LW_MIN, 0.0)
+    for t in range(S):
+        kv = np.einsum("bhk,bhv->bhkv", k[:, t], v[:, t])
+        decay = np.exp(lw[:, t])[..., None]
+        if mode == "mamba":
+            S_ = S_ * decay + kv
+            out[:, t] = np.einsum("bhk,bhkv->bhv", q[:, t], S_)
+        else:
+            read = S_ + kv * u[None, :, :, None]
+            out[:, t] = np.einsum("bhk,bhkv->bhv", q[:, t], read)
+            S_ = S_ * decay + kv
+    return out, S_
+
+
+@pytest.mark.parametrize("mode", ["mamba", "rwkv"])
+@pytest.mark.parametrize("S,chunk", [(32, 32), (64, 16), (48, 32), (8, 32)])
+def test_chunked_matches_recurrence(mode, S, chunk):
+    rng = np.random.RandomState(0)
+    B, H, dk, dv = 2, 3, 8, 16
+    q = rng.randn(B, S, H, dk).astype(np.float32)
+    k = rng.randn(B, S, H, dk).astype(np.float32) * 0.3
+    v = rng.randn(B, S, H, dv).astype(np.float32)
+    lw = -np.abs(rng.randn(B, S, H, dk)).astype(np.float32)
+    u = np.abs(rng.randn(H, dk)).astype(np.float32)
+    out, state = chunked_linear_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(lw),
+        mode=mode, u=jnp.asarray(u) if mode == "rwkv" else None, chunk=chunk)
+    ref_out, ref_state = naive(q, k, v, lw, mode, u)
+    np.testing.assert_allclose(np.asarray(out), ref_out, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state), ref_state,
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("mode", ["mamba", "rwkv"])
+def test_decode_step_continues_chunked_state(mode):
+    """prefill (chunked) then decode steps == one long chunked pass."""
+    rng = np.random.RandomState(1)
+    B, S, H, dk, dv = 1, 32, 2, 4, 8
+    extra = 4
+    q = rng.randn(B, S + extra, H, dk).astype(np.float32)
+    k = rng.randn(B, S + extra, H, dk).astype(np.float32) * 0.3
+    v = rng.randn(B, S + extra, H, dv).astype(np.float32)
+    lw = -np.abs(rng.randn(B, S + extra, H, dk)).astype(np.float32)
+    u = np.abs(rng.randn(H, dk)).astype(np.float32) if mode == "rwkv" else None
+    uj = jnp.asarray(u) if u is not None else None
+
+    full_out, _ = chunked_linear_attention(
+        *(jnp.asarray(a) for a in (q, k, v, lw)), mode=mode, u=uj, chunk=8)
+    pre_out, state = chunked_linear_attention(
+        *(jnp.asarray(a[:, :S]) for a in (q, k, v, lw)), mode=mode, u=uj,
+        chunk=8)
+    for t in range(S, S + extra):
+        step_out, state = linear_attention_step(
+            *(jnp.asarray(a[:, t]) for a in (q, k, v, lw)), mode=mode, u=uj,
+            state=state)
+        np.testing.assert_allclose(np.asarray(step_out),
+                                   np.asarray(full_out[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([16, 24, 32, 64]),
+       st.sampled_from([8, 16, 32]), st.integers(0, 10_000),
+       st.sampled_from(["mamba", "rwkv"]))
+def test_property_chunking_invariance(B, S, chunk, seed, mode):
+    """Output must not depend on the chunk size (system invariant)."""
+    rng = np.random.RandomState(seed)
+    H, dk, dv = 2, 4, 4
+    q = rng.randn(B, S, H, dk).astype(np.float32)
+    k = rng.randn(B, S, H, dk).astype(np.float32) * 0.5
+    v = rng.randn(B, S, H, dv).astype(np.float32)
+    lw = -np.abs(rng.randn(B, S, H, dk) * 2).astype(np.float32)
+    u = np.abs(rng.randn(H, dk)).astype(np.float32)
+    uj = jnp.asarray(u) if mode == "rwkv" else None
+    a, _ = chunked_linear_attention(
+        *(jnp.asarray(x) for x in (q, k, v, lw)), mode=mode, u=uj,
+        chunk=chunk)
+    b, _ = chunked_linear_attention(
+        *(jnp.asarray(x) for x in (q, k, v, lw)), mode=mode, u=uj,
+        chunk=S)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=5e-3, atol=5e-3)

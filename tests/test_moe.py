@@ -1,0 +1,106 @@
+"""MoE: virtual-expert split exactness, capacity behaviour, routing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.moe import _topk_by_argmax, init_moe, moe_apply
+
+
+def dense_reference(p, x, num_experts, top_k, split):
+    """Per-token exact computation of the same routed mixture
+    (no capacity limits), reconstructing real experts from the virtual
+    split: out = sum_k gate_k * expert_k(x)."""
+    d = x.shape[-1]
+    logits = np.einsum("bsd,de->bse", np.asarray(x, np.float32),
+                       np.asarray(p["router"], np.float32))
+    B, S, E = logits.shape
+    order = np.argsort(-logits, axis=-1, kind="stable")[..., :top_k]
+    out = np.zeros_like(np.asarray(x, np.float32))
+    wi = np.asarray(p["wi"], np.float32)
+    wg = np.asarray(p["wg"], np.float32)
+    wo = np.asarray(p["wo"], np.float32)
+    for b in range(B):
+        for s in range(S):
+            sel = order[b, s]
+            g = np.exp(logits[b, s, sel] - logits[b, s, sel].max())
+            g = g / g.sum()
+            acc = np.zeros(d, np.float32)
+            for gw, e in zip(g, sel):
+                for v in range(e * split, (e + 1) * split):
+                    h = x[b, s] @ wg[v]
+                    u = x[b, s] @ wi[v]
+                    silu = h / (1 + np.exp(-h))
+                    acc += gw * ((silu * u) @ wo[v])
+            out[b, s] = acc
+    return out
+
+
+@pytest.mark.parametrize("E,k,split", [(4, 2, 1), (4, 2, 2), (8, 2, 2)])
+def test_moe_matches_dense_reference(E, k, split):
+    rng = np.random.RandomState(0)
+    B, S, d, ff = 2, 8, 16, 32
+    key = jax.random.PRNGKey(0)
+    p, _ = init_moe(key, d, ff, E, split)
+    x = jnp.asarray(rng.randn(B, S, d), jnp.float32)
+    # generous capacity so nothing drops -> must match exactly
+    y, aux = moe_apply(p, x, num_experts=E, top_k=k, split=split,
+                       capacity_factor=8.0, group_size=B * S)
+    ref = dense_reference(p, np.asarray(x), E, k, split)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-3, atol=2e-3)
+    assert np.isfinite(float(aux["moe_aux"]))
+
+
+def test_virtual_expert_split_is_exact():
+    """Splitting each expert's ffn into 2 virtual experts is numerically
+    the same mixture (SwiGLU column decomposition)."""
+    rng = np.random.RandomState(1)
+    B, S, d, ff, E, k = 1, 6, 8, 16, 2, 1
+    key = jax.random.PRNGKey(1)
+    p1, _ = init_moe(key, d, ff, E, 1)
+    # build the split-2 layout from the same weights
+    def split2(w, axis_ff):
+        # (E, d, ff) -> (2E, d, ff/2)  |  (E, ff, d) -> (2E, ff/2, d)
+        w = np.asarray(w)
+        if axis_ff == 2:
+            a = w.reshape(E, w.shape[1], 2, ff // 2).transpose(0, 2, 1, 3)
+            return jnp.asarray(a.reshape(2 * E, w.shape[1], ff // 2))
+        a = w.reshape(E, 2, ff // 2, w.shape[2])
+        return jnp.asarray(a.reshape(2 * E, ff // 2, w.shape[2]))
+
+    p2 = {"router": p1["router"],
+          "wi": split2(p1["wi"], 2), "wg": split2(p1["wg"], 2),
+          "wo": split2(p1["wo"], 1)}
+    x = jnp.asarray(rng.randn(B, S, d), jnp.float32)
+    y1, _ = moe_apply(p1, x, num_experts=E, top_k=k, split=1,
+                      capacity_factor=8.0, group_size=B * S)
+    y2, _ = moe_apply(p2, x, num_experts=E, top_k=k, split=2,
+                      capacity_factor=8.0, group_size=B * S)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_topk_by_argmax_matches_lax_topk():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.randn(4, 7, 8), jnp.float32)
+    v1, i1 = _topk_by_argmax(x, 3)
+    v2, i2 = jax.lax.top_k(x, 3)
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_capacity_drops_tokens_gracefully():
+    """With capacity_factor << 1 output degrades but stays finite and
+    bounded (dropped tokens pass through the residual at the call site)."""
+    rng = np.random.RandomState(3)
+    key = jax.random.PRNGKey(2)
+    p, _ = init_moe(key, 8, 16, 4, 1)
+    x = jnp.asarray(rng.randn(2, 32, 8), jnp.float32)
+    y, _ = moe_apply(p, x, num_experts=4, top_k=2, split=1,
+                     capacity_factor=0.1, group_size=64)
+    assert np.isfinite(np.asarray(y)).all()
+    y_full, _ = moe_apply(p, x, num_experts=4, top_k=2, split=1,
+                          capacity_factor=8.0, group_size=64)
+    # dropping strictly reduces (or keeps) the output magnitude
+    assert (np.linalg.norm(np.asarray(y))
+            <= np.linalg.norm(np.asarray(y_full)) + 1e-3)

@@ -1,0 +1,68 @@
+"""Sharding rules: logical->physical mapping, divisibility, ZeRO-1/FSDP,
+duplicate-axis resolution, padding math."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ARCHS
+
+
+def test_padded_heads_all_archs_divide_model_axis():
+    for cfg in ARCHS.values():
+        if not cfg.n_heads:
+            continue
+        kp, gp = cfg.padded_heads()
+        assert (kp * gp) % cfg.pad_to == 0
+        assert kp >= cfg.n_kv_heads
+        assert gp >= cfg.n_heads // cfg.n_kv_heads
+        # padding never more than 2x (sanity bound on waste)
+        assert kp * gp <= 2 * cfg.n_heads
+        assert cfg.vocab_padded % cfg.pad_to == 0
+        assert cfg.vocab_padded - cfg.vocab_size < cfg.pad_to
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.sharding.rules import ShardingRules, zero1_shard
+
+mesh = make_mesh((4, 2), ("data", "model"))
+r = ShardingRules(mesh, kv_time_shard=True)
+
+# divisible dims shard; uneven dims replicate (jit-arg safety)
+assert r.spec(("batch", None), (8, 5)) == P("data", None)
+assert r.spec(("batch", None), (3, 5)) == P(None, None)
+assert r.spec((None, "ffn"), (3, 6)) == P(None, "model")
+assert r.spec((None, "ffn"), (3, 7)) == P(None, None)
+
+# duplicate-axis resolution: first mapping wins, later replicates
+sp = r.spec(("layers", "batch", "cache_time", "kv_heads", None),
+            (2, 8, 64, 2, 16))
+assert sp == P(None, "data", "model", None, None), sp
+
+# ZeRO-1: extra data sharding on the first divisible free dim
+z = zero1_shard(P(None, "model"), (8, 6), mesh)
+assert z == P("data", "model"), z
+# ... but never duplicates an axis already used
+z2 = zero1_shard(P("data", None), (8, 6), mesh)
+assert z2 == P("data", None), z2
+# ... and skips non-divisible dims
+z3 = zero1_shard(P(None, "model"), (5, 6), mesh)
+assert z3 == P(None, "model"), z3
+print("SHARDING-OK")
+"""
+
+
+@pytest.mark.slow
+def test_rules_on_fake_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDING-OK" in out.stdout
