@@ -1,0 +1,101 @@
+"""CI perf-regression guard over BENCH_protocol.json.
+
+Compares a fresh benchmark run against the committed baseline and fails
+(exit 1) when either guarded metric regresses by more than FACTOR (2x by
+default, the PR-1 acceptance bound):
+
+  * 64-rank tree barrier latency   (us_per_barrier must not grow > FACTOR)
+  * 64-rank tree collective rate   (rate must not shrink > FACTOR)
+
+It also enforces the tentpole claim itself, machine-relatively (both
+numbers come from the SAME fresh run, so host speed cancels out):
+
+  * at 64 ranks, tree collectives/sec/process >= MIN_SPEEDUP x linear
+
+Usage:
+  python benchmarks/check_regression.py \
+      --baseline benchmarks/BENCH_protocol.json \
+      --current BENCH_protocol.json [--factor 2.0] [--min-speedup 2.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GUARD_N = 64
+
+
+def _load(path):
+    with open(path) as f:
+        blob = json.load(f)
+    if "results" not in blob:
+        raise SystemExit(f"{path}: not a BENCH_protocol.json artifact")
+    return blob["results"]
+
+
+def _one(results, **match):
+    hits = [r for r in results
+            if all(r.get(k) == v for k, v in match.items())]
+    if len(hits) != 1:
+        raise SystemExit(f"expected exactly one record matching {match}, "
+                         f"found {len(hits)}")
+    return hits[0]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="max tolerated regression vs baseline")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="required tree/linear rate ratio at 64 ranks")
+    args = ap.parse_args()
+    base = _load(args.baseline)
+    cur = _load(args.current)
+    failures = []
+
+    def barrier_us(results):
+        return _one(results, name="barrier_latency", n=GUARD_N,
+                    algo="tree")["us_per_barrier"]
+
+    def rate(results, algo="tree"):
+        return _one(results, name="fig4_collective_rate", n=GUARD_N,
+                    algo=algo)["collectives_per_sec_per_rank"]
+
+    b_us, c_us = barrier_us(base), barrier_us(cur)
+    print(f"barrier latency  n={GUARD_N} tree: baseline {b_us:.0f}us, "
+          f"current {c_us:.0f}us ({c_us / b_us:.2f}x)")
+    if c_us > args.factor * b_us:
+        failures.append(
+            f"64-rank tree barrier latency regressed {c_us / b_us:.2f}x "
+            f"(limit {args.factor}x): {b_us:.0f}us -> {c_us:.0f}us")
+
+    b_rate, c_rate = rate(base), rate(cur)
+    print(f"collective rate  n={GUARD_N} tree: baseline {b_rate:.0f}/s, "
+          f"current {c_rate:.0f}/s ({c_rate / b_rate:.2f}x)")
+    if c_rate * args.factor < b_rate:
+        failures.append(
+            f"64-rank tree collective rate regressed "
+            f"{b_rate / c_rate:.2f}x (limit {args.factor}x): "
+            f"{b_rate:.0f}/s -> {c_rate:.0f}/s")
+
+    speedup = rate(cur, "tree") / rate(cur, "linear")
+    print(f"tree vs linear   n={GUARD_N}: {speedup:.2f}x "
+          f"(required >= {args.min_speedup}x)")
+    if speedup < args.min_speedup:
+        failures.append(
+            f"tree collectives only {speedup:.2f}x linear at {GUARD_N} "
+            f"ranks (required >= {args.min_speedup}x)")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("perf guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,6 +2,15 @@
 kernel/data-path throughput and roofline summaries.
 
 Prints ``name,us_per_call,derived`` CSV (one line per measurement).
+
+Flags:
+  --quick           smaller rank counts / fewer steps everywhere
+  --smoke           protocol-only benchmark subset for CI: fig4 + barrier
+                    at {4, 8, 64} ranks and drain scaling — skips the
+                    jax-heavy fig2/fig3/kernel/roofline suites
+  --json PATH       additionally write machine-readable results
+                    (BENCH_protocol.json schema; consumed by
+                    benchmarks/check_regression.py in CI)
 """
 from __future__ import annotations
 
@@ -9,25 +18,55 @@ import sys
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv
-    from benchmarks import kernel_bench, protocol_benchmarks, roofline
+    argv = sys.argv[1:]
+    quick = "--quick" in argv
+    smoke = "--smoke" in argv
+    json_path = None
+    if "--json" in argv:
+        try:
+            json_path = argv[argv.index("--json") + 1]
+        except IndexError:
+            sys.exit("error: --json requires a path argument")
 
+    from benchmarks import protocol_benchmarks
+
+    results: list = []
     rows = []
-    rows += protocol_benchmarks.fig2_interposition_overhead(
-        ranks=(4, 8) if quick else (4, 8, 16))
-    rows += protocol_benchmarks.table2_2pc_variants(
-        n=4 if quick else 8, steps=30 if quick else 60)
-    rows += protocol_benchmarks.fig3_ckpt_restart()
-    rows += protocol_benchmarks.fig4_collective_rates(
-        ranks=(4, 8) if quick else (4, 8, 16))
-    rows += protocol_benchmarks.drain_scaling(
-        ranks=(4, 8) if quick else (4, 8, 16, 32))
-    rows += kernel_bench.kernel_throughput(mb=4 if quick else 16)
-    rows += roofline.rows()
+    if smoke:
+        rows += protocol_benchmarks.fig4_collective_rates(
+            ranks=(4, 8, 64), results=results)
+        rows += protocol_benchmarks.barrier_latency(
+            ranks=(8, 64), iters=20, results=results)
+        rows += protocol_benchmarks.drain_scaling(
+            ranks=(4, 8, 64), results=results)
+    else:
+        from benchmarks import kernel_bench, roofline
+
+        rows += protocol_benchmarks.fig2_interposition_overhead(
+            ranks=(4, 8) if quick else (4, 8, 16))
+        rows += protocol_benchmarks.table2_2pc_variants(
+            n=4 if quick else 8, steps=30 if quick else 60)
+        rows += protocol_benchmarks.fig3_ckpt_restart()
+        rows += protocol_benchmarks.fig4_collective_rates(
+            ranks=(4, 8, 16) if quick else (4, 8, 16, 64, 128, 256),
+            results=results)
+        rows += protocol_benchmarks.barrier_latency(
+            ranks=(8,) if quick else (8, 64), results=results)
+        rows += protocol_benchmarks.drain_scaling(
+            ranks=(4, 8) if quick else (4, 8, 16, 32, 64, 128, 256),
+            results=results)
+        rows += kernel_bench.kernel_throughput(mb=4 if quick else 16)
+        rows += roofline.rows()
 
     print("name,us_per_call,derived")
     for r in rows:
         print(r)
+    if json_path:
+        protocol_benchmarks.write_results(
+            json_path, results,
+            meta={"quick": quick, "smoke": smoke,
+                  "msg_cost_us": protocol_benchmarks.MSG_COST_US})
+        print(f"# wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

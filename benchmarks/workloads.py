@@ -23,16 +23,22 @@ from repro.core.virtual import comm_gid
 def run_simulated_job(n_ranks: int, steps: int, profile: str,
                       mode: Optional[str] = "hybrid",
                       ckpt_at_step: Optional[int] = None,
-                      payload: int = 256) -> Dict:
+                      payload: int = 256,
+                      algo: Optional[str] = None,
+                      msg_cost_us: float = 0.0) -> Dict:
     """Run a multi-threaded simulated MPI job; returns timing + stats.
 
     mode=None runs NATIVE (no interposition at all — direct fabric +
     collectives), the baseline for the Fig-2 overhead ratio.
+    algo selects the collective algorithm ("tree" | "linear";
+    None = collectives.DEFAULT_ALGO) for both native and wrapped runs.
+    msg_cost_us enables the fabric's per-message occupancy model —
+    required for rank counts where the serial root fan-out matters.
     """
-    fab = Fabric(n_ranks)
+    fab = Fabric(n_ranks, msg_cost_us=msg_cost_us)
     coord = Coordinator(n_ranks) if mode else None
     agents = ([RankAgent(r, fab.endpoints[r], coord, range(n_ranks),
-                         mode=mode) for r in range(n_ranks)]
+                         mode=mode, coll_algo=algo) for r in range(n_ranks)]
               if mode else None)
     world = list(range(n_ranks))
     gid = comm_gid(tuple(world))
@@ -65,7 +71,7 @@ def run_simulated_job(n_ranks: int, steps: int, profile: str,
                         a.allreduce(a.world_comm, 1.0, lambda x, y: x + y)
                     else:
                         coll.allreduce(ep, world, 1.0, lambda x, y: x + y,
-                                       gid=gid)
+                                       gid=gid, algo=algo)
                     coll_count[r] += 1
             else:  # vasp: collective-heavy
                 for _ in range(4):
@@ -73,12 +79,12 @@ def run_simulated_job(n_ranks: int, steps: int, profile: str,
                         a.allreduce(a.world_comm, r, lambda x, y: x + y)
                     else:
                         coll.allreduce(ep, world, r, lambda x, y: x + y,
-                                       gid=gid)
+                                       gid=gid, algo=algo)
                     coll_count[r] += 1
                 if a:
                     a.bcast(a.world_comm, 0, step)
                 else:
-                    coll.bcast(ep, world, 0, step, gid=gid)
+                    coll.bcast(ep, world, 0, step, gid=gid, algo=algo)
                 coll_count[r] += 1
             if a:
                 a.safe_point(lambda: snaps.setdefault(r, step))

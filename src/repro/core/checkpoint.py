@@ -45,7 +45,12 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
     if isinstance(tree, dict):
         for k in sorted(tree):
             out.update(_flatten(tree[k], f"{prefix}{k}/"))
-    elif isinstance(tree, (list, tuple)):
+    elif (isinstance(tree, (list, tuple))
+          and type(tree).__name__ != "PartitionSpec"):
+        # PartitionSpec IS a tuple subclass but is a spec-tree LEAF: an
+        # empty P() would otherwise vanish and a P('data', ...) would
+        # shred into per-element paths, so elastic restore would bind
+        # every array replicated (checked by name to keep jax lazy here)
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{i}/"))
     else:

@@ -22,6 +22,16 @@ parked ranks if closure stalls (e.g. a peer raced past the intent flag
 into a collective and cannot report).  Progress is preserved: withdrawn
 ranks keep training — a straggler delays the checkpoint, never the fleet
 (§III-J).
+
+Scalability (§III-I): phase-1 closure is EVENT-DRIVEN, not polled.  The
+closure predicate can only flip at a park or a death, so it is evaluated
+exactly there; the §III-K "continue" verdict for a lagging parked rank
+is pushed by the peer's collective_enter report; and parked ranks sleep
+on the condition variable until one of those events (or their watchdog
+window) fires.  The earlier design had every parked rank rescan all
+comm counts every 10ms under the one coordinator lock — O(ranks x
+comms) scans per second that saturated the control plane long before
+256 ranks.
 """
 from __future__ import annotations
 
@@ -51,6 +61,11 @@ class Coordinator:
         self.done_epoch = 0
         self.aborted_epochs: set = set()
         self.phase1_closed: set = set()
+        # newest epoch whose phase 1 has closed: when one closure event
+        # releases ranks parked under DIFFERENT epoch numbers (a second
+        # request landed mid-phase-1), they all adopt this epoch for
+        # phase 2 so commit/release bookkeeping stays aligned
+        self.last_closed_epoch = 0
         self.rank_state: Dict[int, str] = {r: self.RUNNING
                                            for r in range(n_ranks)}
         self.in_gid: Dict[int, Optional[int]] = {r: None for r in range(n_ranks)}
@@ -60,6 +75,12 @@ class Coordinator:
         # per-gid per-rank collective counts (reported only while pending)
         self.entered: Dict[int, Dict[int, int]] = {}
         self.exited: Dict[int, Dict[int, int]] = {}
+        # event-driven park bookkeeping: the exited snapshot each parked
+        # rank brought, the epoch it parked under, and verdicts pushed
+        # to parked ranks by events
+        self.parked_exited: Dict[int, Dict[int, int]] = {}
+        self.parked_epoch: Dict[int, int] = {}
+        self.park_verdict: Dict[int, str] = {}
         self._commit_count = 0
         self.stats = {"checkpoints": 0, "aborts": 0, "control_messages": 0,
                       "continues_issued": 0, "watchdog_withdrawals": 0}
@@ -71,7 +92,12 @@ class Coordinator:
         path runs with zero added synchronization."""
         with self._cv:
             self.intent_epoch += 1
-            self._commit_count = 0
+            # NOTE: _commit_count is deliberately NOT reset here — a new
+            # request may land while a previous epoch's phase 2 is still
+            # committing, and zeroing the count would falsely abort it.
+            # The count resets at phase-1 closure (_try_close), where a
+            # new commit round actually begins (COMMITTED ranks block
+            # closure, so no in-flight round can be clobbered).
             self._cv.notify_all()
             return self.intent_epoch
 
@@ -87,7 +113,18 @@ class Coordinator:
             self.entered.setdefault(gid, {})[rank] = entered_count
             self.last_seen[rank] = time.monotonic()
             self.stats["control_messages"] += 1
-            self._cv.notify_all()
+            # §III-K unblock, pushed at the event: any parked member of
+            # this comm lagging the new entered count is the blocker
+            woke = False
+            for r, mine in self.parked_exited.items():
+                if (r != rank and self.rank_state.get(r) == self.PARKED
+                        and gid in mine and entered_count > mine[gid]):
+                    self.rank_state[r] = self.RUNNING
+                    self.park_verdict[r] = "continue"
+                    self.stats["continues_issued"] += 1
+                    woke = True
+            if woke:
+                self._cv.notify_all()
 
     def collective_exit(self, rank: int, gid: int, exited_count: int) -> None:
         with self._cv:
@@ -96,11 +133,14 @@ class Coordinator:
             self.exited.setdefault(gid, {})[rank] = exited_count
             self.last_seen[rank] = time.monotonic()
             self.stats["control_messages"] += 1
-            self._cv.notify_all()
+            # closure cannot flip here: this rank is not parked, so the
+            # all-parked predicate is false — no wakeup needed
 
     def mark_dead(self, rank: int) -> None:
         with self._cv:
             self.rank_state[rank] = self.DEAD
+            if self.intent_epoch > self.done_epoch:
+                self._try_close(self.intent_epoch)
             self._cv.notify_all()
 
     def _live(self) -> List[int]:
@@ -130,6 +170,36 @@ class Coordinator:
                     return True
         return False
 
+    def _n_parked(self) -> int:
+        return sum(1 for r in self._live()
+                   if self.rank_state[r] == self.PARKED)
+
+    def _try_close(self, epoch: int) -> bool:
+        """Evaluate the phase-1 closure predicate.  Called ONLY at the
+        events that can flip it (a park, a death) — never polled.
+
+        Closes EVERY epoch some rank is parked under, not just the
+        caller's: when a new checkpoint request lands mid-phase-1, early
+        parkers hold the older epoch number, and the cut (all ranks at
+        safe points, counts consistent) is equally valid for both —
+        releasing only the newest would strand the early parkers."""
+        live = self._live()
+        # `live` must be non-empty: with every rank dead the all()
+        # predicate would be vacuously true and close a zero-participant
+        # checkpoint
+        if (live and epoch not in self.aborted_epochs
+                and all(self.rank_state[r] == self.PARKED for r in live)
+                and self._counts_consistent()):
+            closed = {epoch} | {e for e in self.parked_epoch.values()
+                                if e not in self.aborted_epochs}
+            self.phase1_closed.update(closed)
+            self.last_closed_epoch = max(self.last_closed_epoch,
+                                         max(closed))
+            self._commit_count = 0  # the commit round for this cut begins
+            self._cv.notify_all()
+            return True
+        return False
+
     def try_park(self, rank: int, epoch: int, my_exited: Dict[int, int],
                  timeout: float = 60.0) -> str:
         """Rank-side phase 1.  Returns "safe" | "continue" | "abort"."""
@@ -140,44 +210,57 @@ class Coordinator:
                 self.stats["continues_issued"] += 1
                 return "continue"
             self.rank_state[rank] = self.PARKED
+            self.parked_exited[rank] = dict(my_exited)
+            self.parked_epoch[rank] = epoch
+            self.park_verdict.pop(rank, None)
             for gid, cnt in my_exited.items():
                 self.exited.setdefault(gid, {})[rank] = cnt
                 self.entered.setdefault(gid, {}).setdefault(rank, cnt)
             self.last_seen[rank] = time.monotonic()
-            self._cv.notify_all()
             park_t = time.monotonic()
-            while True:
-                if epoch in self.aborted_epochs:
-                    self.rank_state[rank] = self.RUNNING
-                    return "abort"
-                if epoch in self.phase1_closed:
-                    return "safe"
-                live = self._live()
-                parked = [r for r in live if self.rank_state[r] == self.PARKED]
-                if len(parked) == len(live) and self._counts_consistent():
-                    self.phase1_closed.add(epoch)
-                    self._cv.notify_all()
-                    return "safe"
-                if self._lagging(rank, my_exited):
-                    self.rank_state[rank] = self.RUNNING
-                    self.stats["continues_issued"] += 1
-                    self._cv.notify_all()
-                    return "continue"
-                now = time.monotonic()
-                if now - park_t > self.unblock_window and len(parked) < len(live):
-                    # watchdog: someone is stuck without having reported
-                    # (raced past the intent flag) — withdraw and retry
-                    self.rank_state[rank] = self.RUNNING
-                    self.stats["watchdog_withdrawals"] += 1
-                    self._cv.notify_all()
-                    return "continue"
-                if now > deadline:
-                    self.aborted_epochs.add(epoch)
-                    self.stats["aborts"] += 1
-                    self._cv.notify_all()
-                    raise CheckpointAborted(
-                        f"phase-1 timeout; stragglers: {self.straggler_report()}")
-                self._cv.wait(0.01)
+            try:
+                self._try_close(epoch)
+                while True:
+                    if epoch in self.aborted_epochs:
+                        self.rank_state[rank] = self.RUNNING
+                        return "abort"
+                    if epoch in self.phase1_closed:
+                        return "safe"
+                    if self.park_verdict.get(rank) == "continue":
+                        # §III-K unblock pushed by a peer's enter report
+                        # (state was already set back to RUNNING there)
+                        return "continue"
+                    now = time.monotonic()
+                    missing = len(self._live()) - self._n_parked()
+                    if now - park_t > self.unblock_window and missing:
+                        # watchdog: someone is stuck without having
+                        # reported (raced past the intent flag) —
+                        # withdraw and retry
+                        self.rank_state[rank] = self.RUNNING
+                        self.stats["watchdog_withdrawals"] += 1
+                        return "continue"
+                    if now > deadline:
+                        self.aborted_epochs.add(epoch)
+                        self.stats["aborts"] += 1
+                        # un-park before raising, or this rank stays
+                        # PARKED in coordinator state forever and a later
+                        # epoch could close on an invalid cut
+                        self.rank_state[rank] = self.RUNNING
+                        self._cv.notify_all()
+                        raise CheckpointAborted(
+                            f"phase-1 timeout; stragglers: "
+                            f"{self.straggler_report()}")
+                    # sleep until an event; wake early only for the
+                    # watchdog window or the deadline
+                    wait_t = min(0.2, deadline - now)
+                    if missing:
+                        wait_t = min(wait_t, max(
+                            0.001, self.unblock_window - (now - park_t)))
+                    self._cv.wait(wait_t)
+            finally:
+                self.parked_exited.pop(rank, None)
+                self.parked_epoch.pop(rank, None)
+                self.park_verdict.pop(rank, None)
 
     # ---- phase 2: commit -------------------------------------------------------
     def report_committed(self, rank: int) -> None:
@@ -196,7 +279,7 @@ class Coordinator:
                     self.stats["aborts"] += 1
                     self._cv.notify_all()
                     raise CheckpointAborted("phase-2 timeout")
-                self._cv.wait(0.01)
+                self._cv.wait(0.2)  # event-driven: report_committed notifies
             self.done_epoch = epoch
             self.stats["checkpoints"] += 1
             for r in self._live():
@@ -211,7 +294,7 @@ class Coordinator:
                     return False
                 if time.monotonic() > deadline:
                     raise CheckpointAborted("release timeout")
-                self._cv.wait(0.01)
+                self._cv.wait(0.2)  # event-driven: release notifies
             return True
 
     # ---- straggler introspection (§III-J) --------------------------------------

@@ -34,15 +34,17 @@ class DrainError(RuntimeError):
 
 
 def drain_rank(ep: Endpoint, ranks: Sequence[int], gid: int = 0,
-               timeout: float = 30.0) -> Dict:
+               timeout: float = 30.0, algo: str = None) -> Dict:
     """Run the §III-B drain for one rank (call concurrently on all ranks).
 
-    Returns drain stats for EXPERIMENTS.md §Protocol.
+    `algo` selects the collective algorithm for the bookkeeping alltoall
+    (all ranks must agree).  Returns drain stats for EXPERIMENTS.md
+    §Protocol.
     """
     # step 2: one alltoall — rank r sends peer s the scalar sent[r->s];
     # afterwards expected[s] = bytes peer s claims to have sent here.
     rows = [ep.sent_bytes[dst] for dst in ranks]
-    got = coll.alltoall(ep, ranks, rows, gid=gid)
+    got = coll.alltoall(ep, ranks, rows, gid=gid, algo=algo)
     expected = {s: got[i] for i, s in enumerate(ranks)}
 
     drained = 0

@@ -42,12 +42,16 @@ class RankAgent:
     """Per-rank MANA-2.0 agent: interposition wrappers + 2PC state machine."""
 
     def __init__(self, rank: int, ep: Endpoint, coordinator: Coordinator,
-                 world: Sequence[int], mode: str = "hybrid"):
+                 world: Sequence[int], mode: str = "hybrid",
+                 coll_algo: str = None):
         assert mode in ("mana1", "nobarrier", "hybrid")
         self.rank = rank
         self.ep = ep
         self.coord = coordinator
         self.mode = mode
+        # collective algorithm ("tree" | "linear"; None = module default)
+        # — must agree across all ranks of a job
+        self.coll_algo = coll_algo
         self.done_epoch = 0
         # upper-half tables (serialized into every checkpoint)
         self.comms = VirtualCommTable()
@@ -116,7 +120,7 @@ class RankAgent:
         if self.mode == "mana1":
             # original MANA: unconditional barrier before the collective
             self.stats["barriers_inserted"] += 1
-            coll.barrier(self.ep, ranks, gid=gid)
+            coll.barrier(self.ep, ranks, gid=gid, algo=self.coll_algo)
         report = pending and self.mode == "hybrid"
         self.in_lower_half += 1
         try:
@@ -124,7 +128,7 @@ class RankAgent:
                 self.stats["coordinator_reports"] += 1
                 self.coord.collective_enter(self.rank, gid,
                                             self.coll_counts[gid] + 1)
-            out = fn(self.ep, ranks, *args, gid=gid, **kw)
+            out = fn(self.ep, ranks, *args, gid=gid, algo=self.coll_algo, **kw)
             self.coll_counts[gid] += 1
             if report:
                 self.coord.collective_exit(self.rank, gid,
@@ -173,9 +177,15 @@ class RankAgent:
         if verdict == "abort":
             self.done_epoch = epoch
             return False
-        # phase 1 closed: every rank parked, no collective in flight
+        # phase 1 closed: every rank parked, no collective in flight.
+        # Adopt the newest closed epoch: if a second request landed
+        # mid-phase-1, ranks parked under different epoch numbers all
+        # completed the SAME physical cut, and phase 2 must agree on one
+        # epoch or commit/release bookkeeping misaligns
+        epoch = max(epoch, self.coord.last_closed_epoch)
         world = self.comm_ranks(self.world_comm)
-        drain_rank(self.ep, world, gid=comm_gid(world), timeout=timeout)
+        drain_rank(self.ep, world, gid=comm_gid(world), timeout=timeout,
+                   algo=self.coll_algo)
         ok = False
         try:
             snapshot()

@@ -214,6 +214,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.monotonic() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per program
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
     from repro.launch.hlo_analysis import analyze_hlo
     colls = collective_bytes(hlo)
@@ -228,7 +230,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            # older jaxlib has no peak_memory_in_bytes; approximate the
+            # live-set peak as args + outputs + temporaries (attribute
+            # presence, not truthiness: a real measured 0 must survive)
+            "peak_bytes": (
+                mem.peak_memory_in_bytes
+                if hasattr(mem, "peak_memory_in_bytes")
+                else (getattr(mem, "argument_size_in_bytes", 0)
+                      + getattr(mem, "output_size_in_bytes", 0)
+                      + getattr(mem, "temp_size_in_bytes", 0))),
         },
         cost={
             "flops": cost.get("flops"),

@@ -93,7 +93,9 @@ class ShardingRules:
                     out.append(None)
                     continue
             used.update(axes)
-            out.append(phys)
+            # unwrap 1-tuples: jax no longer treats P(('data',),) as
+            # equal to P('data',), and downstream code compares specs
+            out.append(axes[0] if len(axes) == 1 else phys)
         return P(*out)
 
     def named(self, logical: Sequence[Optional[str]],

@@ -1,0 +1,82 @@
+"""Deterministic stand-in for `hypothesis` in minimal environments.
+
+Tier-1 must collect AND run without hypothesis installed (the CI tier
+installs the real thing; see pyproject's [test] extra).  Rather than
+`pytest.importorskip`-ing whole modules — which would silently drop the
+non-property tests that live alongside — test files guard the import:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, st
+
+The fallback replays each property test over a fixed number of examples
+drawn from a PRNG seeded by the test's qualified name (crc32, not
+`hash()`, which is salted per process), so failures reproduce across
+runs.  Only the strategy combinators this repo uses are implemented:
+integers, booleans, sampled_from, tuples, lists.
+"""
+from __future__ import annotations
+
+
+import random
+import zlib
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda rng: rng.randint(lo, hi))
+
+
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def _lists(elem, min_size=0, max_size=None):
+    hi = 10 if max_size is None else max_size
+    return _Strategy(
+        lambda rng: [elem.draw(rng) for _ in range(rng.randint(min_size, hi))])
+
+
+st = SimpleNamespace(integers=_integers, booleans=_booleans,
+                     sampled_from=_sampled_from, tuples=_tuples,
+                     lists=_lists)
+
+_DEFAULT_EXAMPLES = 10
+_MAX_EXAMPLES_CAP = 20  # keep the minimal-env tier fast
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+        return fn
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # deliberately NOT functools.wraps: pytest must see a zero-arg
+        # signature, or it would resolve the drawn parameters as fixtures
+        def runner():
+            n = getattr(runner, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                fn(*(s.draw(rng) for s in strategies))
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(runner, attr, getattr(fn, attr))
+        return runner
+    return deco

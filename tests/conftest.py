@@ -6,6 +6,9 @@ import sys
 # set --xla_force_host_platform_device_count themselves.
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ itself, so the _hypothesis_fallback shim imports under any
+# pytest import mode
+sys.path.insert(0, os.path.dirname(__file__))
 
 import numpy as np
 import pytest

@@ -1,0 +1,249 @@
+"""Tree vs linear collective equivalence (the PR-1 scaling refactor).
+
+Every collective must produce identical results under both algorithm
+arms at power-of-two AND non-power-of-two communicator sizes, with the
+reduction order of allreduce preserved exactly (checked with an
+associative but non-commutative op).  A drain test checkpoints mid-run
+under tree collectives and verifies §III-B byte-counter closure.
+"""
+import threading
+
+import pytest
+
+from repro.comm import collectives as coll
+from repro.comm.fabric import Fabric
+from repro.core.coordinator import Coordinator
+from repro.core.two_phase_commit import RankAgent
+from repro.core.virtual import comm_gid
+
+SIZES = [2, 3, 5, 8, 16]
+SIZES_SLOW = [64]
+
+
+def _run_all(n, fn, timeout=60, msg_cost_us=0.0):
+    """Run fn(ep, rank) on n concurrent rank threads; return results."""
+    fab = Fabric(n, msg_cost_us=msg_cost_us)
+    out = [None] * n
+    errs = []
+
+    def work(r):
+        try:
+            out[r] = fn(fab.endpoints[r], r)
+        except Exception as e:  # noqa: BLE001 - surfaced via assert below
+            errs.append((r, repr(e)))
+
+    threads = [threading.Thread(target=work, args=(r,), daemon=True)
+               for r in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=timeout)
+    assert not errs, errs
+    assert not any(t.is_alive() for t in threads), "collective hung"
+    return out
+
+
+def _equivalence_suite(n):
+    world = list(range(n))
+    gid = comm_gid(tuple(world))
+    per_algo = {}
+    for algo in coll.ALGOS:
+        results = {}
+        for root in sorted({0, n - 1, n // 2}):
+            results[f"bcast_{root}"] = _run_all(
+                n, lambda ep, r: coll.bcast(ep, world, root,
+                                            {"from": root, "n": n},
+                                            gid=gid, algo=algo))
+            results[f"gather_{root}"] = _run_all(
+                n, lambda ep, r: coll.gather(ep, world, root, (r, r * r),
+                                             gid=gid, algo=algo))
+        # associative, NON-commutative op: list concat — catches any
+        # algorithm that reduces out of rank order
+        results["allreduce"] = _run_all(
+            n, lambda ep, r: coll.allreduce(ep, world, [r],
+                                            lambda a, b: a + b,
+                                            gid=gid, algo=algo))
+        results["alltoall"] = _run_all(
+            n, lambda ep, r: coll.alltoall(ep, world,
+                                           [(r, i) for i in world],
+                                           gid=gid, algo=algo))
+        _run_all(n, lambda ep, r: coll.barrier(ep, world, gid=gid, algo=algo))
+        per_algo[algo] = results
+    return per_algo
+
+
+def _check_equivalent(n, per_algo):
+    world = list(range(n))
+    tree, lin = per_algo["tree"], per_algo["linear"]
+    assert tree.keys() == lin.keys()
+    for key in tree:
+        assert tree[key] == lin[key], (n, key)
+    # and both match the specified semantics, not just each other
+    for root in sorted({0, n - 1, n // 2}):
+        assert all(v == {"from": root, "n": n}
+                   for v in tree[f"bcast_{root}"])
+        g = tree[f"gather_{root}"]
+        assert g[root] == [(r, r * r) for r in world]
+        assert all(g[r] == [] for r in world if r != root)
+    assert all(v == world for v in tree["allreduce"])
+    for r in world:
+        assert tree["alltoall"][r] == [(i, r) for i in world]
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_tree_linear_equivalence(n):
+    _check_equivalent(n, _equivalence_suite(n))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n", SIZES_SLOW)
+def test_tree_linear_equivalence_large(n):
+    _check_equivalent(n, _equivalence_suite(n))
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_recursive_doubling_allreduce_equivalence(n):
+    """The third allreduce arm (latency-optimal recursive doubling) must
+    match the linear fold too, including the non-power-of-two fixup and
+    the rank-ordered reduction of a non-commutative op."""
+    world = list(range(n))
+    out = _run_all(
+        n, lambda ep, r: coll.allreduce_recursive_doubling(
+            ep, world, [r], lambda a, b: a + b))
+    assert all(v == world for v in out)
+
+
+@pytest.mark.parametrize("n", [3, 8])
+def test_collective_sequence_reuses_fifo_tags(n):
+    """Back-to-back collectives on one communicator must not cross-match:
+    per-(endpoint, gid) tag sequencing + per-(src, tag) FIFO ordering."""
+    world = list(range(n))
+    gid = comm_gid(tuple(world))
+
+    def work(ep, r):
+        out = []
+        for step in range(20):
+            out.append(coll.allreduce(ep, world, r + step,
+                                      lambda a, b: a + b, gid=gid))
+            out.append(coll.bcast(ep, world, step % n, (step, "payload"),
+                                  gid=gid))
+        coll.barrier(ep, world, gid=gid)
+        return out
+
+    results = _run_all(n, work)
+    assert all(res == results[0] for res in results)
+    expect = [x for step in range(20)
+              for x in (sum(range(n)) + n * step, (step, "payload"))]
+    assert results[0] == expect
+
+
+def test_allreduce_single_rank_and_nontrivial_rank_ids():
+    """Communicators whose members are not 0..n-1 (sub-comms)."""
+    fab = Fabric(8)
+    ranks = [1, 3, 4, 6, 7]  # non-contiguous, n=5 (non-power-of-two)
+    out = {}
+
+    def work(r):
+        out[r] = coll.allreduce(fab.endpoints[r], ranks, [r],
+                                lambda a, b: a + b, algo="tree")
+
+    threads = [threading.Thread(target=work, args=(r,), daemon=True)
+               for r in ranks]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert all(out[r] == ranks for r in ranks)
+    # n=1 degenerate comm
+    assert coll.allreduce(fab.endpoints[2], [2], "x",
+                          lambda a, b: a + b, algo="tree") == "x"
+    assert coll.bcast(fab.endpoints[2], [2], 2, 42, algo="tree") == 42
+    assert coll.gather(fab.endpoints[2], [2], 2, 7, algo="tree") == [7]
+
+
+@pytest.mark.parametrize("algo", coll.ALGOS)
+def test_checkpoint_drain_mid_flight_closes_byte_counters(algo):
+    """Checkpoint while p2p messages are in flight under each collective
+    algorithm: at snapshot time (post-drain) every pair's byte counters
+    must balance — §III-B closure on top of the tree substrate."""
+    N = 16
+    fab, coord = Fabric(N), Coordinator(N)
+    agents = [RankAgent(r, fab.endpoints[r], coord, range(N), mode="hybrid",
+                        coll_algo=algo) for r in range(N)]
+    closure = {}
+
+    def snapshot(r):
+        # drain_rank just ran and sends are frozen while parked: this
+        # rank's recv counters must equal every peer's send counters
+        closure[r] = all(
+            fab.endpoints[r].recvd_bytes[s] == fab.endpoints[s].sent_bytes[r]
+            for s in range(N) if s != r)
+
+    def work(r):
+        a = agents[r]
+        for step in range(40):
+            if r == 0 and step == 20:
+                coord.request_checkpoint()
+            # skewed pipeline: send now, receive two steps later, so
+            # messages are in flight at any cut point
+            a.send((r + 1) % N, bytes([step % 251]) * (r + 1))
+            if step >= 2:
+                a.recv((r - 1) % N, timeout=30)
+            a.allreduce(a.world_comm, 1, lambda x, y: x + y)
+            a.safe_point(lambda: snapshot(r))
+        for _ in range(2):  # consume the pipeline tail
+            a.recv((r - 1) % N, timeout=30)
+
+    threads = [threading.Thread(target=work, args=(r,), daemon=True)
+               for r in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert coord.stats["checkpoints"] == 1
+    assert len(closure) == N
+    assert all(closure.values()), closure
+    # drained messages were re-delivered through the drain buffer
+    for r in range(N):
+        assert len(fab.endpoints[r].drain_buffer) == 0
+
+
+def test_default_algo_switch():
+    prev = coll.set_default_algo("linear")
+    try:
+        assert coll.DEFAULT_ALGO == "linear"
+        fab = Fabric(1)
+        assert coll.bcast(fab.endpoints[0], [0], 0, "v") == "v"
+    finally:
+        coll.set_default_algo(prev)
+    with pytest.raises(ValueError):
+        coll.bcast(Fabric(1).endpoints[0], [0], 0, "v", algo="bogus")
+
+
+@pytest.mark.slow
+def test_tree_faster_than_linear_at_scale():
+    """The point of the refactor: at 64 ranks, under the fabric's
+    virtual-time occupancy model (which surfaces the serial root
+    fan-out that zero-cost wall timing hides), tree allreduce must beat
+    linear by >2x in simulated completion time.  Virtual latencies are
+    deterministic, so the bound is not flaky."""
+    n, iters = 64, 6
+    world = list(range(n))
+    vtimes = {}
+    for algo in ("tree", "linear"):
+        fab = Fabric(n, msg_cost_us=100.0)
+
+        def work(r, algo=algo, fab=fab):
+            for _ in range(iters):
+                coll.allreduce(fab.endpoints[r], world, 1,
+                               lambda a, b: a + b, algo=algo)
+
+        threads = [threading.Thread(target=work, args=(r,), daemon=True)
+                   for r in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=180)
+        assert not any(t.is_alive() for t in threads), "hung"
+        vtimes[algo] = max(ep.vclock for ep in fab.endpoints)
+    assert vtimes["tree"] * 2 < vtimes["linear"], vtimes

@@ -3,7 +3,10 @@ including a hypothesis property sweep over shapes/decays/chunk sizes."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.models.linear_attention import (LW_MIN, chunked_linear_attention,
                                            linear_attention_step)

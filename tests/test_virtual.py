@@ -2,7 +2,10 @@
 two-step retirement, active-comm restore, gid locality, boundedness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal env: deterministic fallback sampler
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.virtual import (REQUEST_NULL, VirtualCommTable,
                                 VirtualRequestTable, comm_gid)
