@@ -7,10 +7,20 @@ default, the PR-1 acceptance bound):
   * 64-rank tree barrier latency   (us_per_barrier must not grow > FACTOR)
   * 64-rank tree collective rate   (rate must not shrink > FACTOR)
 
-It also enforces the tentpole claim itself, machine-relatively (both
-numbers come from the SAME fresh run, so host speed cancels out):
+It also enforces the tentpole claims themselves, machine-relatively
+(the compared numbers come from the SAME fresh run, so host speed
+cancels out):
 
   * at 64 ranks, tree collectives/sec/process >= MIN_SPEEDUP x linear
+  * transport invariance: where the run carries records for the same
+    (n, algo) point on more than one transport backend, the VIRTUAL
+    per-iteration latencies must agree to within 0.1% — the occupancy
+    model lives in the backend-agnostic Endpoint, so any divergence is
+    a transport-semantics bug, not noise.
+
+Records are matched per transport; records without a "transport" field
+(pre-transport artifacts) read as "inproc".  Only inproc records are
+guarded against the committed baseline.
 
 Usage:
   python benchmarks/check_regression.py \
@@ -24,6 +34,7 @@ import json
 import sys
 
 GUARD_N = 64
+GUARD_TRANSPORT = "inproc"
 
 
 def _load(path):
@@ -34,12 +45,17 @@ def _load(path):
     return blob["results"]
 
 
-def _one(results, **match):
-    hits = [r for r in results
-            if all(r.get(k) == v for k, v in match.items())]
+def _match(results, transport=GUARD_TRANSPORT, **match):
+    return [r for r in results
+            if r.get("transport", "inproc") == transport
+            and all(r.get(k) == v for k, v in match.items())]
+
+
+def _one(results, transport=GUARD_TRANSPORT, **match):
+    hits = _match(results, transport, **match)
     if len(hits) != 1:
-        raise SystemExit(f"expected exactly one record matching {match}, "
-                         f"found {len(hits)}")
+        raise SystemExit(f"expected exactly one {transport} record "
+                         f"matching {match}, found {len(hits)}")
     return hits[0]
 
 
@@ -88,6 +104,28 @@ def main() -> int:
         failures.append(
             f"tree collectives only {speedup:.2f}x linear at {GUARD_N} "
             f"ranks (required >= {args.min_speedup}x)")
+
+    # transport invariance: virtual latencies agree across backends
+    transports = sorted({r.get("transport", "inproc") for r in cur
+                         if r.get("name") == "fig4_collective_rate"})
+    for t in transports:
+        if t == GUARD_TRANSPORT:
+            continue
+        for rec in _match(cur, transport=t, name="fig4_collective_rate"):
+            twins = _match(cur, name="fig4_collective_rate",
+                           n=rec["n"], algo=rec["algo"])
+            if not twins:
+                continue  # no inproc point at this (n, algo) in this run
+            a, b = rec["virtual_us_per_iter"], twins[0]["virtual_us_per_iter"]
+            drift = abs(a - b) / b
+            print(f"transport invariance n={rec['n']} {rec['algo']}: "
+                  f"{t} {a:.1f}us vs inproc {b:.1f}us "
+                  f"(drift {100 * drift:.3f}%)")
+            if drift > 1e-3:
+                failures.append(
+                    f"virtual latency diverges across transports at "
+                    f"n={rec['n']} {rec['algo']}: {t}={a:.1f}us "
+                    f"inproc={b:.1f}us — transport semantics bug")
 
     if failures:
         for f in failures:

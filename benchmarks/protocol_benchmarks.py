@@ -11,6 +11,12 @@ simulated fabric (CSV rows; collected by benchmarks.run).
       tree vs linear collective algorithms, at 4..256 ranks.
   barrier_latency — per-barrier latency vs rank count and algorithm.
   drain_scaling — §III-B alltoall drain vs MANA-1 centralized drain.
+  transport_collective_rates — the fig4 harness run through the world
+      harness on a NAMED transport backend (one OS process per rank
+      for "socket"), emitting records tagged with the transport.  The
+      virtual-time model rides in the transport-agnostic Endpoint, so
+      per-transport numbers are directly comparable — identical rank
+      counts must produce identical virtual rates on every backend.
 
 fig4 and barrier_latency run with the fabric's virtual-time occupancy
 model (MSG_COST_US; see `repro.comm.fabric.Fabric`) and report VIRTUAL
@@ -47,8 +53,9 @@ def write_results(path: str, results: List[Dict], meta: Optional[Dict] = None):
     """Serialize benchmark records to the JSON artifact CI consumes.
 
     Schema: {"schema": ..., "meta": {...}, "results": [record, ...]}
-    where every record carries at least {"name", ...} and the guarded
-    records are:
+    where every record carries at least {"name", "transport", ...}
+    (older artifacts without "transport" read as "inproc") and the
+    guarded records are the inproc-transport:
       {"name": "fig4_collective_rate", "n", "algo",
        "collectives_per_sec_per_rank"}
       {"name": "barrier_latency", "n", "algo", "us_per_barrier"}
@@ -189,7 +196,8 @@ def fig4_collective_rates(ranks=(4, 8, 16, 64, 128, 256), iters=20,
                         f"{1e6 * vtotal / its:.1f},rate={per_sec:.1f}")
             if results is not None:
                 results.append({
-                    "name": "fig4_collective_rate", "n": n, "algo": algo,
+                    "name": "fig4_collective_rate", "transport": "inproc",
+                    "n": n, "algo": algo,
                     "collectives_per_sec_per_rank": per_sec,
                     "virtual_us_per_iter": 1e6 * vtotal / its})
         if "tree" in rates and "linear" in rates:
@@ -215,8 +223,56 @@ def barrier_latency(ranks=(8, 64), iters=30, algos=("tree", "linear"),
             us = 1e6 * _run_collective_loop(n, iters, body) / iters
             rows.append(f"barrier_{algo}_n{n},{us:.0f},")
             if results is not None:
-                results.append({"name": "barrier_latency", "n": n,
+                results.append({"name": "barrier_latency",
+                                "transport": "inproc", "n": n,
                                 "algo": algo, "us_per_barrier": us})
+    return rows
+
+
+def transport_collective_rates(transport: str, ranks=(4, 8), iters=8,
+                               algos=("tree", "linear"),
+                               results: Optional[List[Dict]] = None
+                               ) -> List[str]:
+    """fig4's per-collective rate measured over a NAMED transport
+    backend through the world harness — "socket" runs one OS process
+    per rank over loopback TCP, with the wire control plane bootstrapped
+    exactly as a real job would.  Virtual rates are deterministic and
+    BACKEND-INVARIANT (the occupancy model lives in the shared
+    Endpoint), so a mismatch against the inproc number at the same n is
+    a transport bug, not noise."""
+    from repro.comm import collectives as coll
+    from repro.comm.transport.harness import run_world
+    from repro.core.virtual import comm_gid
+
+    rows = []
+    for n in ranks:
+        gid = comm_gid(tuple(range(n)))
+        for algo in algos:
+            def work(ctx, algo=algo, gid=gid, its=iters):
+                world = list(range(ctx.n))
+                for k in range(its):
+                    coll.barrier(ctx.ep, world, gid=gid, algo="tree")
+                    coll.allreduce(ctx.ep, world, ctx.rank,
+                                   lambda a, b: a + b, gid=gid, algo=algo)
+                    coll.bcast(ctx.ep, world, 0, k, gid=gid, algo=algo)
+                return True
+
+            t0 = time.perf_counter()
+            res = run_world(transport, n, work, msg_cost_us=MSG_COST_US,
+                            timeout=240)
+            wall_s = time.perf_counter() - t0
+            vtotal = max(res.vclocks)
+            per_sec = 2 * iters / vtotal
+            rows.append(f"fig4_collectives_per_s_{algo}_{transport}_n{n},"
+                        f"{1e6 * vtotal / iters:.1f},rate={per_sec:.1f};"
+                        f"wall_s={wall_s:.2f}")
+            if results is not None:
+                results.append({
+                    "name": "fig4_collective_rate", "transport": transport,
+                    "n": n, "algo": algo,
+                    "collectives_per_sec_per_rank": per_sec,
+                    "virtual_us_per_iter": 1e6 * vtotal / iters,
+                    "wall_s": wall_s})
     return rows
 
 
@@ -262,8 +318,10 @@ def drain_scaling(ranks=(4, 8, 16, 32, 64, 128, 256),
         rows.append(f"drain_centralized_n{n},{1e6 * central_s:.0f},"
                     f"coordinator_msgs={msgs}")
         if results is not None:
-            results.append({"name": "drain", "n": n, "style": "alltoall",
+            results.append({"name": "drain", "transport": "inproc", "n": n,
+                            "style": "alltoall",
                             "us": 1e6 * alltoall_s, "coordinator_msgs": 0})
-            results.append({"name": "drain", "n": n, "style": "centralized",
+            results.append({"name": "drain", "transport": "inproc", "n": n,
+                            "style": "centralized",
                             "us": 1e6 * central_s, "coordinator_msgs": msgs})
     return rows

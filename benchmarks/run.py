@@ -8,6 +8,10 @@ Flags:
   --smoke           protocol-only benchmark subset for CI: fig4 + barrier
                     at {4, 8, 64} ranks and drain scaling — skips the
                     jax-heavy fig2/fig3/kernel/roofline suites
+  --transport T     which fabric backend(s) to benchmark: "inproc"
+                    (default; the guarded baseline records), "socket"
+                    (one-process-per-rank collective rates through the
+                    world harness), or "all"
   --json PATH       additionally write machine-readable results
                     (BENCH_protocol.json schema; consumed by
                     benchmarks/check_regression.py in CI)
@@ -21,6 +25,15 @@ def main() -> None:
     argv = sys.argv[1:]
     quick = "--quick" in argv
     smoke = "--smoke" in argv
+    transport = "inproc"
+    if "--transport" in argv:
+        try:
+            transport = argv[argv.index("--transport") + 1]
+        except IndexError:
+            sys.exit("error: --transport requires a backend name")
+        if transport not in ("inproc", "socket", "all"):
+            sys.exit(f"error: unknown transport {transport!r} "
+                     "(inproc | socket | all)")
     json_path = None
     if "--json" in argv:
         try:
@@ -32,7 +45,14 @@ def main() -> None:
 
     results: list = []
     rows = []
-    if smoke:
+    if transport in ("socket", "all"):
+        # per-transport collective rates: one OS process per rank over
+        # loopback TCP; virtual rates must match inproc at the same n
+        rows += protocol_benchmarks.transport_collective_rates(
+            "socket", ranks=(4, 8), results=results)
+    if transport == "socket":
+        pass  # socket-only run: skip the inproc suites below
+    elif smoke:
         rows += protocol_benchmarks.fig4_collective_rates(
             ranks=(4, 8, 64), results=results)
         rows += protocol_benchmarks.barrier_latency(
@@ -62,9 +82,11 @@ def main() -> None:
     for r in rows:
         print(r)
     if json_path:
+        transports = {r.get("transport", "inproc") for r in results}
         protocol_benchmarks.write_results(
             json_path, results,
             meta={"quick": quick, "smoke": smoke,
+                  "transports": sorted(transports),
                   "msg_cost_us": protocol_benchmarks.MSG_COST_US})
         print(f"# wrote {json_path}", file=sys.stderr)
 

@@ -14,7 +14,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.comm import collectives as coll
-from repro.comm.fabric import Fabric
+from repro.comm.transport import create_world
 from repro.core.coordinator import Coordinator
 from repro.core.two_phase_commit import RankAgent
 from repro.core.virtual import comm_gid
@@ -25,7 +25,8 @@ def run_simulated_job(n_ranks: int, steps: int, profile: str,
                       ckpt_at_step: Optional[int] = None,
                       payload: int = 256,
                       algo: Optional[str] = None,
-                      msg_cost_us: float = 0.0) -> Dict:
+                      msg_cost_us: float = 0.0,
+                      transport: str = "inproc") -> Dict:
     """Run a multi-threaded simulated MPI job; returns timing + stats.
 
     mode=None runs NATIVE (no interposition at all — direct fabric +
@@ -34,11 +35,25 @@ def run_simulated_job(n_ranks: int, steps: int, profile: str,
     None = collectives.DEFAULT_ALGO) for both native and wrapped runs.
     msg_cost_us enables the fabric's per-message occupancy model —
     required for rank counts where the serial root fan-out matters.
+    transport picks the fabric backend from the registry; threads drive
+    the endpoints either way (so "socket" here measures the loopback
+    wire path, not multi-process parallelism — that is
+    `protocol_benchmarks.transport_collective_rates`).
     """
-    fab = Fabric(n_ranks, msg_cost_us=msg_cost_us)
+    fab = create_world(transport, n_ranks, msg_cost_us=msg_cost_us)
+    try:
+        return _run_job(fab, n_ranks, steps, profile, mode, ckpt_at_step,
+                        payload, algo, transport)
+    finally:
+        fab.close()  # tear down backend resources (sockets for "socket")
+
+
+def _run_job(fab, n_ranks, steps, profile, mode, ckpt_at_step, payload,
+             algo, transport) -> Dict:
     coord = Coordinator(n_ranks) if mode else None
     agents = ([RankAgent(r, fab.endpoints[r], coord, range(n_ranks),
-                         mode=mode, coll_algo=algo) for r in range(n_ranks)]
+                         mode=mode, coll_algo=algo, transport=transport)
+               for r in range(n_ranks)]
               if mode else None)
     world = list(range(n_ranks))
     gid = comm_gid(tuple(world))

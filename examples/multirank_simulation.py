@@ -1,226 +1,268 @@
-"""256-rank checkpoint -> drain -> restore round trip under the hybrid
-two-phase-commit, on tree collectives and the indexed fabric.
+"""Checkpoint -> drain -> CROSS-TRANSPORT restore round trip under the
+hybrid two-phase-commit — the paper's signature network-agnosticism
+scenario on the pluggable transport layer.
 
-Phase A runs a 256-rank job with pipelined ring p2p (receives lag sends,
-so messages are ALWAYS in flight at the checkpoint cut) plus per-row
-tree allreduces, with one rank straggling while the checkpoint is
-pending (watch the coordinator's straggler report name it, §III-J/K).
-The §III-B drain pulls every in-flight byte into per-rank drain buffers,
-and each rank snapshots its serialized upper half (comm table, counts,
-drain buffer).
+Phase A runs an N-rank job over transport A with pipelined ring p2p
+(receives lag sends, so messages are ALWAYS in flight at the checkpoint
+cut) plus per-row tree allreduces, with one rank straggling while the
+checkpoint is pending (watch the coordinator's straggler report name
+it, §III-J/K).  The §III-B drain pulls every in-flight byte into
+per-rank drain buffers, each rank snapshots its serialized upper half
+(comm table, counts, drain buffer), and the launcher writes the
+snapshots to a JSON checkpoint IMAGE — transport-free by construction:
+membership, counters and hex payloads only, no sockets, no locks.
 
-The job world is then torn down and rebuilt from the snapshots alone:
-fresh fabric, fresh coordinator, comm tables restored from membership
-(§III-C), drained messages re-appended.  Every rank first replays its
-backlog out of the drain buffer — sequence numbers must continue exactly
-where the cut happened — then runs a second traffic epoch including a
-SECOND checkpoint, proving the restored world drains and commits too.
+The phase-A world is then torn down completely and a fresh world is
+bootstrapped over transport B *from the image file alone* — the paper's
+"lower half rebuilt from scratch": virtual comm tables rebound onto new
+endpoints, drained messages re-delivered on the new network.  Every
+rank first replays its backlog out of the drain buffer — sequence
+numbers must continue exactly where the cut happened — then runs a
+second traffic epoch including a SECOND checkpoint, proving the
+restored world drains and commits too.
 
-    PYTHONPATH=src python examples/multirank_simulation.py [--quick]
+Transports (see `repro.comm.transport`):
+  inproc — every rank a thread in one process (reference backend)
+  socket — every rank a separate OS process over loopback TCP
 
---quick (or MANA_DEMO_RANKS=<n>) scales the job down for fast runs.
+    PYTHONPATH=src python examples/multirank_simulation.py \
+        [--quick] [--ranks N] [--transport-a inproc] [--transport-b socket]
+
+Defaults: 256 ranks (32 with --quick; MANA_DEMO_RANKS=<n> overrides),
+inproc -> inproc.  The CI transport matrix runs inproc -> socket and
+socket -> inproc at 64 ranks.
 """
+import argparse
+import json
 import os
 import sys
-import threading
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.comm.fabric import Fabric, Message
-from repro.core.coordinator import Coordinator
-from repro.core.two_phase_commit import RankAgent
+from repro.comm.transport import available_transports
+from repro.comm.transport.base import Message
+from repro.comm.transport.harness import run_world
 from repro.core.virtual import VirtualCommTable, comm_gid
 
-N = int(os.environ.get("MANA_DEMO_RANKS",
-                       "32" if "--quick" in sys.argv else "256"))
-ROW = 16 if N % 16 == 0 else max(d for d in (8, 4, 2, 1) if N % d == 0)
 STEPS_A, STEPS_B, LAG = 10, 6, 2
 CKPT_STEP_A, CKPT_STEP_B = 4, 3
 
 
-def spawn(fn):
-    threads = [threading.Thread(target=fn, args=(r,), daemon=True)
-               for r in range(N)]
-    for t in threads:
-        t.start()
-    return threads
+def parse_args():
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--quick", action="store_true",
+                   help="scale the job down for fast runs")
+    p.add_argument("--ranks", type=int, default=None)
+    p.add_argument("--transport-a", default="inproc",
+                   choices=available_transports(),
+                   help="transport the job is checkpointed under")
+    p.add_argument("--transport-b", default="inproc",
+                   choices=available_transports(),
+                   help="transport the job is restored under")
+    p.add_argument("--image", default=None,
+                   help="checkpoint image path (default: a temp file)")
+    args = p.parse_args()
+    if args.ranks is None:
+        args.ranks = int(os.environ.get("MANA_DEMO_RANKS",
+                                        "32" if args.quick else "256"))
+    return args
 
 
-def make_world(unblock_window=0.5, create_rows=True):
-    fab = Fabric(N)
-    coord = Coordinator(N, unblock_window=unblock_window)
-    agents = [RankAgent(r, fab.endpoints[r], coord, range(N), mode="hybrid",
-                        coll_algo="tree") for r in range(N)]
-    if create_rows:  # restore_world rebuilds comms from snapshots instead
-        for a in agents:
-            row = a.rank // ROW
-            a.row = a.create_comm(range(row * ROW, row * ROW + ROW))
-    return fab, coord, agents
+def row_width(n):
+    return 16 if n % 16 == 0 else max(d for d in (8, 4, 2, 1) if n % d == 0)
 
 
 def payload(src, seq):
     return src.to_bytes(2, "big") + seq.to_bytes(4, "big")
 
 
-def phase_a():
-    fab, coord, agents = make_world()
-    snaps = {}
-    errors = []
+# ---------------------------------------------------------------------------
+# phase A: run under transport A, checkpoint mid-traffic, write the image
+# ---------------------------------------------------------------------------
 
-    def work(r):
-        try:
-            a = agents[r]
-            recvd = 0
-            step = 0
-            for step in range(STEPS_A):
-                if r == 0 and step == CKPT_STEP_A:
-                    print(f">>> A: checkpoint requested (step {step})")
-                    coord.request_checkpoint()
-                if r == 7 and step == CKPT_STEP_A and a._ckpt_pending():
-                    time.sleep(0.3)  # straggler inside the ckpt window
-                a.send((r + 1) % N, payload(r, step), tag=0)
-                if step >= LAG:   # pipelined ring: receives lag sends
-                    m = a.recv((r - 1) % N, timeout=120)
-                    assert payload((r - 1) % N, recvd) == m.payload
-                    recvd += 1
-                a.allreduce(a.row, 1, lambda x, y: x + y)
-                took = a.safe_point(lambda: snaps.setdefault(
-                    r, {"step": step, "recvd": recvd,
-                        "agent": a.serialize()}))
-                if took and r == 0:
-                    print(f">>> A: checkpoint committed (step {step})")
-            # end of the finite demo loop — a real job would keep
-            # stepping.  The world barrier orders every rank after the
-            # checkpoint request, then ranks service safe points until
-            # the pending epoch resolves (the LAG in-flight messages per
-            # ring pair are deliberately NOT consumed: they are the
-            # §III-B drain's payload at the cut).
-            a.barrier_op(a.world_comm)
-            while a._ckpt_pending():
-                took = a.safe_point(lambda: snaps.setdefault(
-                    r, {"step": step, "recvd": recvd,
-                        "agent": a.serialize()}))
-                if took and r == 0:
-                    print(">>> A: checkpoint committed")
-                time.sleep(0.002)
-        except Exception as e:  # noqa: BLE001
-            errors.append((r, repr(e)))
+def make_phase_a(n):
+    row_w = row_width(n)
+    straggler = min(7, n - 1)
 
-    threads = spawn(work)
+    def work(ctx):
+        a, r = ctx.agent, ctx.rank
+        base = (r // row_w) * row_w
+        a.row = a.create_comm(range(base, base + row_w))
+        snap_box = {}
+
+        def snapshot():
+            # the app's comm-handle bindings (world/row vids) are
+            # upper-half state: vids survive restore by design, and
+            # membership alone cannot distinguish identically-membered
+            # comms (a row of width n IS the world)
+            snap_box.setdefault("snap", {
+                "step": step, "recvd": recvd,
+                "world_comm": a.world_comm, "row": a.row,
+                "agent": a.serialize()})
+
+        recvd = 0
+        step = 0
+        for step in range(STEPS_A):
+            if r == 0 and step == CKPT_STEP_A:
+                print(f">>> A: checkpoint requested (step {step})")
+                ctx.coord.request_checkpoint()
+            if r == straggler and step == CKPT_STEP_A and a._ckpt_pending():
+                time.sleep(0.3)  # straggler inside the ckpt window
+            a.send((r + 1) % n, payload(r, step), tag=0)
+            if step >= LAG:   # pipelined ring: receives lag sends
+                m = a.recv((r - 1) % n, timeout=120)
+                assert payload((r - 1) % n, recvd) == m.payload
+                recvd += 1
+            a.allreduce(a.row, 1, lambda x, y: x + y)
+            if a.safe_point(snapshot) and r == 0:
+                print(f">>> A: checkpoint committed (step {step})")
+        # end of the finite demo loop — a real job would keep stepping.
+        # The world barrier orders every rank after the checkpoint
+        # request, then ranks service safe points until the pending
+        # epoch resolves (the LAG in-flight messages per ring pair are
+        # deliberately NOT consumed: they are the §III-B drain's
+        # payload at the cut).
+        a.barrier_op(a.world_comm)
+        while a._ckpt_pending():
+            if a.safe_point(snapshot) and r == 0:
+                print(">>> A: checkpoint committed")
+            time.sleep(0.002)
+        return snap_box["snap"]
+
+    return work
+
+
+def watch_stragglers(server):
     time.sleep(0.45)
-    report = coord.straggler_report(threshold=0.2)
+    report = server.straggler_report(threshold=0.2)
     if report:
         sample = dict(list(report.items())[:3])
         print(f">>> A: straggler report while waiting: {len(report)} "
               f"rank(s) not at a safe point yet, e.g. {sample}")
-    for t in threads:
-        t.join(timeout=300)
-    assert not errors, errors[:3]
-    assert len(snaps) == N and coord.stats["checkpoints"] == 1
-    drained = sum(len(s["agent"]["drain_buffer"]) for s in snaps.values())
+
+
+def phase_a(n, transport, image_path):
+    res = run_world(transport, n, make_phase_a(n), unblock_window=0.5,
+                    timeout=300, on_running=watch_stragglers)
+    assert len(res.results) == n and res.coord_stats["checkpoints"] == 1
+    drained = sum(len(s["agent"]["drain_buffer"])
+                  for s in res.results.values())
     assert drained > 0, "expected in-flight messages at the cut"
-    print(f">>> A: {N} ranks snapshotted; {drained} messages were "
-          f"drained in flight; coordinator stats: {coord.stats}")
-    return snaps
+    image = {"transport": transport, "n_ranks": n,
+             "ranks": {str(r): s for r, s in res.results.items()}}
+    with open(image_path, "w") as f:
+        json.dump(image, f)
+    print(f">>> A: {n} ranks snapshotted over {transport!r}; {drained} "
+          f"messages were drained in flight; coordinator stats: "
+          f"{res.coord_stats}")
+    print(f">>> A: checkpoint image written: {image_path} "
+          f"({os.path.getsize(image_path)} bytes, transport-free JSON)")
 
 
-def restore_world(snaps):
-    """Rebuild a fresh job purely from the phase-A snapshots (§III-C):
-    comm tables from membership, drain buffers re-appended, counters
-    restored."""
-    fab, coord, agents = make_world(create_rows=False)
-    world = tuple(range(N))
-    for r, a in enumerate(agents):
+# ---------------------------------------------------------------------------
+# phase B: bootstrap a fresh world over transport B from the image alone
+# ---------------------------------------------------------------------------
+
+def make_phase_b(n, snaps, from_transport, to_transport):
+    def work(ctx):
+        a, r, ep = ctx.agent, ctx.rank, ctx.ep
+        prev = (r - 1) % n
         blob = snaps[r]["agent"]
-        ep = fab.endpoints[r]
+        assert blob["transport"] == from_transport, blob["transport"]
+        # §III-C restore: rebind the virtual comm table onto THIS
+        # world's endpoint (the new network), re-register gids, restore
+        # collective counts, re-append drained messages for replay.
+        # App-held comm HANDLES come from the image (vids are stable
+        # across restore); membership can't distinguish identically-
+        # membered comms, e.g. a row as wide as the world.
         a.comms = VirtualCommTable.restore(
             blob["comms"], real_factory=lambda ranks: ep)
-        for vid, ranks in a.comms.active().items():
-            coord.register_comm(comm_gid(tuple(ranks)), tuple(ranks))
-            if tuple(ranks) == world:
-                a.world_comm = vid
-            else:
-                a.row = vid
-        a.coll_counts.update(blob["coll_counts"])
+        for ranks in a.comms.active().values():
+            ctx.coord.register_comm(comm_gid(tuple(ranks)), tuple(ranks))
+        a.world_comm = snaps[r]["world_comm"]
+        a.row = snaps[r]["row"]
+        a.coll_counts.update({int(g): c
+                              for g, c in blob["coll_counts"].items()})
         for src, dst, tag, hexpayload in blob["drain_buffer"]:
             ep.drain_buffer.append(
                 Message(src, dst, tag, bytes.fromhex(hexpayload)))
-    return fab, coord, agents
+        # 1) replay the backlog out of the drain buffer: sequence
+        #    numbers must continue exactly at the cut (closure check:
+        #    predecessor's sends minus our receives at ITS cut step)
+        backlog = len(ep.drain_buffer)
+        expected = (snaps[prev]["step"] + 1) - snaps[r]["recvd"]
+        assert backlog == expected, (r, backlog, expected)
+        seq = snaps[r]["recvd"]
+        for _ in range(backlog):
+            m = a.recv(prev, timeout=120)
+            assert m.payload == payload(prev, seq), (r, seq)
+            seq += 1
+        assert len(ep.drain_buffer) == 0
+        # 2) fresh epoch on a new tag, with a second checkpoint
+        recvd = 0
+        step = 0
+        for step in range(STEPS_B):
+            if r == 0 and step == CKPT_STEP_B:
+                print(f">>> B: second checkpoint requested (step {step})")
+                ctx.coord.request_checkpoint()
+            a.send((r + 1) % n, payload(r, step), tag=1)
+            if step >= 1:
+                m = a.recv(prev, tag=1, timeout=120)
+                assert m.payload == payload(prev, recvd)
+                recvd += 1
+            a.allreduce(a.row, 1, lambda x, y: x + y)
+            if a.safe_point(lambda: None) and r == 0:
+                print(f">>> B: second checkpoint committed (step {step})")
+        a.barrier_op(a.world_comm)
+        while a._ckpt_pending():  # end-of-job safe-point service
+            if a.safe_point(lambda: None) and r == 0:
+                print(">>> B: second checkpoint committed")
+            time.sleep(0.002)
+        # pipeline tail (lag 1) — possibly replayed from the second
+        # checkpoint's drain buffer
+        a.recv(prev, tag=1, timeout=120)
+        assert a.transport == to_transport
+        return {"sent": list(ep.sent_bytes), "recvd": list(ep.recvd_bytes)}
+
+    return work
 
 
-def phase_b(snaps):
-    fab, coord, agents = restore_world(snaps)
-    errors = []
-    second = {}
-
-    def work(r):
-        try:
-            a = agents[r]
-            ep = fab.endpoints[r]
-            prev = (r - 1) % N
-            # 1) replay the backlog out of the drain buffer: sequence
-            #    numbers must continue exactly at the cut (closure check:
-            #    predecessor's sends minus our receives at ITS cut step)
-            backlog = len(ep.drain_buffer)
-            expected = (snaps[prev]["step"] + 1) - snaps[r]["recvd"]
-            assert backlog == expected, (r, backlog, expected)
-            seq = snaps[r]["recvd"]
-            for _ in range(backlog):
-                m = a.recv(prev, timeout=120)
-                assert m.payload == payload(prev, seq), (r, seq)
-                seq += 1
-            assert len(ep.drain_buffer) == 0
-            # 2) fresh epoch on a new tag, with a second checkpoint
-            recvd = 0
-            for step in range(STEPS_B):
-                if r == 0 and step == CKPT_STEP_B:
-                    print(f">>> B: second checkpoint requested "
-                          f"(step {step})")
-                    coord.request_checkpoint()
-                a.send((r + 1) % N, payload(r, step), tag=1)
-                if step >= 1:
-                    m = a.recv(prev, tag=1, timeout=120)
-                    assert m.payload == payload(prev, recvd)
-                    recvd += 1
-                a.allreduce(a.row, 1, lambda x, y: x + y)
-                if a.safe_point(lambda: second.setdefault(r, step)) \
-                        and r == 0:
-                    print(f">>> B: second checkpoint committed "
-                          f"(step {step})")
-            a.barrier_op(a.world_comm)
-            while a._ckpt_pending():  # end-of-job safe-point service
-                if a.safe_point(lambda: second.setdefault(r, step)) \
-                        and r == 0:
-                    print(">>> B: second checkpoint committed")
-                time.sleep(0.002)
-            # pipeline tail (lag 1) — possibly replayed from the second
-            # checkpoint's drain buffer
-            a.recv(prev, tag=1, timeout=120)
-        except Exception as e:  # noqa: BLE001
-            errors.append((r, repr(e)))
-
-    threads = spawn(work)
-    for t in threads:
-        t.join(timeout=300)
-    assert not errors, errors[:3]
-    assert len(second) == N and coord.stats["checkpoints"] == 1
-    # §III-B closure in the RESTORED world: every pair's byte counters
-    # balance once the traffic of phase B is fully consumed
-    for r in range(N):
-        for s in ((r - 1) % N, (r + 1) % N):
-            assert (fab.endpoints[r].recvd_bytes[s]
-                    == fab.endpoints[s].sent_bytes[r]), (r, s)
-    print(f">>> B: restored world committed a second checkpoint; "
-          f"coordinator stats: {coord.stats}")
+def phase_b(n, transport, image_path):
+    with open(image_path) as f:
+        image = json.load(f)
+    assert image["n_ranks"] == n
+    snaps = {int(r): s for r, s in image["ranks"].items()}
+    print(f">>> B: restoring image written under {image['transport']!r} "
+          f"onto a fresh {transport!r} world")
+    res = run_world(transport, n,
+                    make_phase_b(n, snaps, image["transport"], transport),
+                    unblock_window=0.5, timeout=300)
+    assert len(res.results) == n and res.coord_stats["checkpoints"] == 1
+    # §III-B closure in the RESTORED world: every ring pair's byte
+    # counters balance once the traffic of phase B is fully consumed
+    # (checked from the per-rank counter vectors each rank shipped back
+    # — the launcher holds no endpoint in a multi-process world)
+    for r in range(n):
+        for s in ((r - 1) % n, (r + 1) % n):
+            assert (res.results[r]["recvd"][s]
+                    == res.results[s]["sent"][r]), (r, s)
+    print(f">>> B: world restored over {transport!r} committed a second "
+          f"checkpoint; coordinator stats: {res.coord_stats}")
 
 
 def main():
+    args = parse_args()
+    n = args.ranks
+    image_path = args.image or os.path.join(
+        tempfile.mkdtemp(prefix="mana_image_"), "ckpt_image.json")
     t0 = time.perf_counter()
-    print(f"=== {N}-rank checkpoint -> drain -> restore round trip "
-          f"(rows of {ROW}, tree collectives) ===")
-    snaps = phase_a()
-    phase_b(snaps)
+    print(f"=== {n}-rank checkpoint -> drain -> restore round trip "
+          f"(rows of {row_width(n)}, tree collectives, "
+          f"{args.transport_a} -> {args.transport_b}) ===")
+    phase_a(n, args.transport_a, image_path)
+    phase_b(n, args.transport_b, image_path)
     print(f"PASS ({time.perf_counter() - t0:.1f}s)")
 
 

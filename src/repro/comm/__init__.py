@@ -1,1 +1,4 @@
 from repro.comm.fabric import Fabric, Endpoint, Message  # noqa: F401
+from repro.comm.transport import (  # noqa: F401
+    available_transports, create_world, register_transport,
+)

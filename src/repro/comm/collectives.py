@@ -55,7 +55,7 @@ call, or the per-(endpoint, gid) tag sequences diverge.
 from __future__ import annotations
 
 import pickle
-from typing import Any, Callable, List, Sequence
+from typing import Any, Callable, List, Optional, Sequence
 
 from repro.comm.fabric import Endpoint
 
@@ -93,7 +93,7 @@ def _next_tag(ep: Endpoint, gid: int) -> int:
 # ---------------------------------------------------------------------------
 
 def bcast(ep: Endpoint, ranks: Sequence[int], root: int, obj: Any,
-          gid: int = 0, timeout: float = 60.0, algo: str = None) -> Any:
+          gid: int = 0, timeout: float = 60.0, algo: Optional[str] = None) -> Any:
     algo = _resolve(algo)  # validate BEFORE consuming a tag slot: a
     # rejected call must not desynchronize the per-gid tag sequence
     tag = _next_tag(ep, gid)
@@ -144,7 +144,7 @@ def _bcast_tree(ep, ranks, root, obj, tag, timeout):
 # ---------------------------------------------------------------------------
 
 def gather(ep: Endpoint, ranks: Sequence[int], root: int, obj: Any,
-           gid: int = 0, timeout: float = 60.0, algo: str = None) -> List[Any]:
+           gid: int = 0, timeout: float = 60.0, algo: Optional[str] = None) -> List[Any]:
     algo = _resolve(algo)  # validate before consuming a tag slot
     tag = _next_tag(ep, gid)
     if algo == "linear":
@@ -190,7 +190,7 @@ def _gather_tree(ep, ranks, root, obj, tag, timeout):
 # ---------------------------------------------------------------------------
 
 def barrier(ep: Endpoint, ranks: Sequence[int], gid: int = 0,
-            timeout: float = 60.0, algo: str = None) -> None:
+            timeout: float = 60.0, algo: Optional[str] = None) -> None:
     if _resolve(algo) == "linear":
         # reference arm: gather-to-root then bcast (two tag slots)
         root = min(ranks)
@@ -235,7 +235,7 @@ def _barrier_binomial(ep, ranks, tag, timeout):
 
 def allreduce(ep: Endpoint, ranks: Sequence[int], obj: Any,
               op: Callable[[Any, Any], Any], gid: int = 0,
-              timeout: float = 60.0, algo: str = None) -> Any:
+              timeout: float = 60.0, algo: Optional[str] = None) -> Any:
     if _resolve(algo) == "linear":
         root = min(ranks)
         vals = gather(ep, ranks, root, obj, gid, timeout, algo="linear")
@@ -323,7 +323,7 @@ def _allreduce_recursive_doubling(ep, ranks, obj, op, tag, timeout):
 # ---------------------------------------------------------------------------
 
 def alltoall(ep: Endpoint, ranks: Sequence[int], rows: List[Any],
-             gid: int = 0, timeout: float = 60.0, algo: str = None) -> List[Any]:
+             gid: int = 0, timeout: float = 60.0, algo: Optional[str] = None) -> List[Any]:
     """rows[i] goes to ranks[i]; returns the rows addressed to this rank.
 
     This is the §III-B drain exchange: O(1) traffic to the coordinator

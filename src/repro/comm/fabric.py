@@ -1,345 +1,16 @@
-"""In-memory multi-rank message fabric: the stand-in for the network layer.
+"""Back-compat facade for the pre-transport fabric API.
 
-On a real TPU deployment the p2p path is device-to-device RDMA between
-hosts (pipeline sends, async parameter pushes); here it is an in-process
-queue fabric so that the MANA-2.0 protocol layer above it (drain, 2PC,
-virtual requests) runs *unchanged* and can be exercised at hundreds of
-simulated ranks on one machine.
-
-Semantics mirror MPI + the paper's bookkeeping needs:
-  * send() is buffered-asynchronous (message lands in the destination's
-    queue immediately; "in the network" = enqueued but not yet recv'd);
-  * per-(src,dst) BYTE COUNTERS are updated at send/recv time — the
-    small-grain counters of §III-B;
-  * irecv() eagerly claims a matching message if one is queued (moving it
-    out of iprobe's sight) — reproducing the exact Iprobe-miss subtlety
-    §III-B has to handle;
-  * a drain_buffer holds messages drained by the checkpoint protocol; app
-    recv() consults it first after restart.
-
-Indexed matching
-----------------
-Message stores are indexed, not scanned.  Each destination rank owns an
-`_IndexedStore` with
-
-  * a per-(src, tag) FIFO deque — exact-tag claim/iprobe are O(1)
-    amortized instead of O(queue length);
-  * a per-src FIFO of application messages (tag >= 0) — wildcard recv,
-    iprobe(src) and checkpoint drain_one(src) are O(1) amortized;
-  * a per-src live-byte counter — queued_bytes_from() is O(1) instead of
-    a full-queue sum (it sits inside the §III-B drain loop).
-
-A message lives in two indexes at once, so a claim through one index
-marks the Message consumed and the other index discards it lazily when
-it surfaces at a deque head (with periodic compaction so memory stays
-proportional to live messages).  Within any one (src, tag) stream and
-within any one src's app stream, FIFO order is preserved — collectives
-rely on this for multi-round exchanges that reuse one tag.
-
-The drain_buffer uses the same indexed store (plus iteration support for
-checkpoint serialization), so post-restart replay matching is O(1) too.
+The fabric was refactored into a pluggable transport layer
+(`repro.comm.transport`): matching/counter/drain/occupancy semantics
+live in the backend-agnostic `Endpoint` (`transport.base`), and the
+original in-process threaded fabric is now the "inproc" backend
+(`transport.inproc.InprocTransport`) — reference semantics, zero
+behavior change.  `Fabric` remains the canonical name for an inproc
+world, so existing tests, benchmarks and workloads run unchanged.
 """
-from __future__ import annotations
-
-import threading
-import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
-
-
-@dataclass
-class Message:
-    src: int
-    dst: int
-    tag: int
-    payload: bytes
-    # set once when some index hands the message out; other indexes that
-    # still hold a reference skip it lazily
-    consumed: bool = field(default=False, repr=False, compare=False)
-    # sender's virtual-time stamp (occupancy model; see Fabric docstring)
-    vtime: float = field(default=0.0, repr=False, compare=False)
-
-    @property
-    def nbytes(self) -> int:
-        return len(self.payload)
-
-
-class _IndexedStore:
-    """(src, tag)-indexed message store; see module docstring.
-
-    Not thread-safe by itself — the owner serializes access (Endpoint
-    uses the per-rank fabric lock for the network store; the drain
-    buffer is only touched by its own rank's thread).
-    """
-
-    def __init__(self):
-        self._by_src_tag: Dict[Tuple[int, int], deque] = {}
-        self._app_by_src: Dict[int, deque] = {}   # tag >= 0 only
-        self._app_bytes: Dict[int, int] = {}
-        self._order: deque = deque()              # arrival order (lazy)
-        self._live = 0
-
-    def __len__(self) -> int:
-        return self._live
-
-    def __iter__(self):
-        return iter([m for m in self._order if not m.consumed])
-
-    def add(self, msg: Message) -> None:
-        self._by_src_tag.setdefault((msg.src, msg.tag), deque()).append(msg)
-        if msg.tag >= 0:
-            self._app_by_src.setdefault(msg.src, deque()).append(msg)
-            self._app_bytes[msg.src] = (self._app_bytes.get(msg.src, 0)
-                                        + msg.nbytes)
-        self._order.append(msg)
-        self._live += 1
-
-    def app_bytes(self, src: int) -> int:
-        return self._app_bytes.get(src, 0)
-
-    @staticmethod
-    def _prune(q: Optional[deque]) -> Optional[deque]:
-        """Drop consumed messages off the head; None-out empty deques."""
-        while q and q[0].consumed:
-            q.popleft()
-        return q
-
-    def _pop_live(self, index: Dict, key) -> Optional[Message]:
-        q = index.get(key)
-        msg = None
-        while q:
-            m = q.popleft()
-            if not m.consumed:
-                msg = m
-                break
-        if q is not None and not q:
-            del index[key]  # tags are per-collective-call: reap dead keys
-        return msg
-
-    def claim(self, src: int, tag: Optional[int]) -> Optional[Message]:
-        """Claim the oldest matching live message.  tag=None is the
-        app-level wildcard: it matches tag >= 0 only, never protocol
-        traffic (collectives always address messages with explicit
-        tags)."""
-        if tag is None:
-            msg = self._pop_live(self._app_by_src, src)
-        else:
-            msg = self._pop_live(self._by_src_tag, (src, tag))
-        if msg is None:
-            return None
-        msg.consumed = True
-        if msg.tag >= 0:
-            self._app_bytes[msg.src] -= msg.nbytes
-        self._live -= 1
-        # amortized compaction: a message claimed through one index stays
-        # consumed in the OTHER index (and in _order) until either it
-        # surfaces at a deque head or this rebuild filters it out — both
-        # must be swept or memory grows with total messages ever received
-        if len(self._order) > 64 and self._live * 2 < len(self._order):
-            self._order = deque(m for m in self._order if not m.consumed)
-            for index in (self._by_src_tag, self._app_by_src):
-                for key, q in list(index.items()):
-                    live_q = deque(m for m in q if not m.consumed)
-                    if live_q:
-                        index[key] = live_q
-                    else:
-                        del index[key]
-        return msg
-
-    def peek(self, src: int, tag: Optional[int]) -> bool:
-        """iprobe support: is a live matching message present?"""
-        if tag is None:
-            return bool(self._prune(self._app_by_src.get(src)))
-        return bool(self._prune(self._by_src_tag.get((src, tag))))
-
-
-class _DrainBuffer(_IndexedStore):
-    """Indexed drain buffer that still iterates in arrival order for
-    checkpoint serialization (`RankAgent.serialize`) and byte sums."""
-
-    def append(self, msg: Message) -> None:
-        self.add(msg)
-
-
-class _IrecvRequest:
-    """A pending nonblocking receive; may claim a queued message eagerly."""
-
-    def __init__(self, endpoint: "Endpoint", src: int, tag: Optional[int]):
-        self.endpoint = endpoint
-        self.src = src
-        self.tag = tag
-        self.message: Optional[Message] = None
-        self.consumed = False
-
-    def try_complete(self) -> bool:
-        if self.message is not None:
-            return True
-        msg = self.endpoint._claim(self.src, self.tag)
-        if msg is not None:
-            self.message = msg
-            return True
-        return False
-
-
-class Fabric:
-    """Shared state for all ranks of one simulated job.
-
-    msg_cost_us > 0 enables the LogP-style VIRTUAL-TIME occupancy model:
-    each endpoint carries a logical clock (`Endpoint.vclock`, seconds).
-    A send advances the sender's clock by the cost and stamps the
-    message; a network receive advances the receiver's clock to
-    max(own clock, message stamp) + cost.  `max(ep.vclock)` after a run
-    is the simulated completion time — the critical path through
-    per-endpoint serial occupancy, which is exactly the serial root
-    fan-out / O(ranks) drain cost MANA-2.0 is designed around and which
-    zero-cost wall-clock timing on a GIL-bound host cannot expose.
-
-    Virtual latencies are DETERMINISTIC whenever receives name their
-    source (collectives always do): they do not depend on host speed,
-    timer slack, or scheduler interleaving — which is what makes the
-    benchmark numbers comparable across machines and guardable in CI.
-    Wall-clock behaviour is unaffected (no sleeps are injected).
-    Correctness tests keep the default 0.
-    """
-
-    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0):
-        self.n_ranks = n_ranks
-        self.msg_cost_s = msg_cost_us * 1e-6
-        self._stores: List[_IndexedStore] = [_IndexedStore()
-                                             for _ in range(n_ranks)]
-        self._locks = [threading.Lock() for _ in range(n_ranks)]
-        self._cvs = [threading.Condition(l) for l in self._locks]
-        self.endpoints = [Endpoint(self, r) for r in range(n_ranks)]
-
-    def deliver(self, msg: Message) -> None:
-        with self._cvs[msg.dst]:
-            self._stores[msg.dst].add(msg)
-            self._cvs[msg.dst].notify_all()
-
-
-class Endpoint:
-    def __init__(self, fabric: Fabric, rank: int):
-        self.fabric = fabric
-        self.rank = rank
-        n = fabric.n_ranks
-        # §III-B: per-pair byte counters, kept by the wrappers at runtime
-        self.sent_bytes = [0] * n
-        self.recvd_bytes = [0] * n
-        # messages drained by the checkpoint protocol, re-delivered post-restart
-        self.drain_buffer = _DrainBuffer()
-        self.pending_irecvs: List[_IrecvRequest] = []
-        self.vclock = 0.0  # virtual-time occupancy clock (see Fabric)
-        self.coll_seq: Dict[int, int] = {}  # per-gid collective seq (upper half)
-        self._lock = fabric._locks[rank]
-        self._cv = fabric._cvs[rank]
-        self._store = fabric._stores[rank]
-
-    # ---- send side ---------------------------------------------------------
-    def send(self, dst: int, payload: bytes, tag: int = 0) -> None:
-        """Buffered send (the Isend-with-immediate-completion model)."""
-        msg = Message(self.rank, dst, tag, payload)
-        if tag >= 0:  # internal/protocol traffic (tag<0) is not app state
-            self.sent_bytes[dst] += msg.nbytes
-        if self.fabric.msg_cost_s:
-            # sender-side occupancy; stamp BEFORE delivery so the
-            # receiver's clock advance observes it
-            self.vclock += self.fabric.msg_cost_s
-            msg.vtime = self.vclock
-        self.fabric.deliver(msg)
-
-    def isend(self, dst: int, payload: bytes, tag: int = 0):
-        self.send(dst, payload, tag)
-        return _CompletedSend()
-
-    # ---- receive side -------------------------------------------------------
-    def _claim(self, src: int, tag: Optional[int]) -> Optional[Message]:
-        """Claim a matching message from the drain buffer (already counted
-        at drain time) or the network store (counted here)."""
-        msg = self.drain_buffer.claim(src, tag)
-        if msg is not None:
-            return msg
-        with self._lock:
-            msg = self._store.claim(src, tag)
-            if msg is not None and msg.tag >= 0:
-                self.recvd_bytes[src] += msg.nbytes
-        if msg is not None and self.fabric.msg_cost_s:
-            self._vreceive(msg)
-        return msg
-
-    def _vreceive(self, msg: Message) -> None:
-        """Receiver-side occupancy: the message cannot complete before
-        the sender stamped it, and draining it occupies this endpoint."""
-        self.vclock = max(self.vclock, msg.vtime) + self.fabric.msg_cost_s
-
-    def recv(self, src: int, tag: Optional[int] = None,
-             timeout: Optional[float] = None) -> Message:
-        deadline = None if timeout is None else time.monotonic() + timeout
-        while True:
-            msg = self.drain_buffer.claim(src, tag)
-            if msg is not None:
-                return msg  # occupancy was already paid at drain time
-            with self._cv:
-                # claim and wait under ONE lock hold: deliver() notifies
-                # under the same lock, so a message landing between a
-                # failed claim and the wait cannot be missed (the old
-                # claim-then-wait pattern lost that race and fell back
-                # on a 10ms poll — the dominant cost at 64+ ranks)
-                msg = self._store.claim(src, tag)
-                if msg is not None:
-                    if msg.tag >= 0:
-                        self.recvd_bytes[src] += msg.nbytes
-                else:
-                    remaining = (None if deadline is None
-                                 else deadline - time.monotonic())
-                    if remaining is not None and remaining <= 0:
-                        raise TimeoutError(
-                            f"rank {self.rank} recv from {src} timed out")
-                    # 0.25s safety cap only; wakeups are event-driven
-                    self._cv.wait(timeout=0.25 if remaining is None
-                                  else min(0.25, remaining))
-            if msg is not None:
-                if self.fabric.msg_cost_s:
-                    self._vreceive(msg)
-                return msg
-
-    def irecv(self, src: int, tag: Optional[int] = None) -> _IrecvRequest:
-        req = _IrecvRequest(self, src, tag)
-        req.try_complete()   # eager claim — creates the Iprobe-miss case
-        self.pending_irecvs.append(req)
-        return req
-
-    def iprobe(self, src: int, tag: Optional[int] = None) -> bool:
-        if tag is not None and tag < 0:
-            # iprobe is an APP-level operation: protocol traffic is invisible
-            return False
-        with self._lock:
-            return self._store.peek(src, tag)
-
-    # ---- drain support (§III-B) ---------------------------------------------
-    def queued_bytes_from(self, src: int) -> int:
-        with self._lock:
-            return self._store.app_bytes(src)
-
-    def drain_one(self, src: int) -> Optional[Message]:
-        """Checkpoint-time drain: pull an app message out of the network
-        into the drain buffer (re-delivered to the app on restart)."""
-        with self._lock:
-            msg = self._store.claim(src, None)
-        if msg is not None:
-            if self.fabric.msg_cost_s:
-                self._vreceive(msg)  # a drain IS a receive
-            self.recvd_bytes[src] += msg.nbytes
-            # fresh copy: the network store still holds lazy references to
-            # the claimed instance and relies on its `consumed` flag
-            msg = Message(msg.src, msg.dst, msg.tag, msg.payload)
-            self.drain_buffer.append(msg)
-        return msg
-
-    def gc_pending_irecvs(self) -> None:
-        self.pending_irecvs = [r for r in self.pending_irecvs if not r.consumed]
-
-
-class _CompletedSend:
-    def try_complete(self) -> bool:
-        return True
+from repro.comm.transport.base import (  # noqa: F401
+    CTRL_BASE, TAG_CTRL, TAG_INTENT, TAG_RESULT,
+    Endpoint, Message, is_ctrl_tag,
+    _CompletedSend, _DrainBuffer, _IndexedStore, _IrecvRequest,
+)
+from repro.comm.transport.inproc import InprocTransport as Fabric  # noqa: F401

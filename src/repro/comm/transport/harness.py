@@ -1,0 +1,214 @@
+"""World harness: run one rank function per rank over any transport.
+
+The launcher picture, uniform across backends:
+
+    run_world("inproc", n, fn)   n threads in this process
+    run_world("socket", n, fn)   n forked OS processes over loopback TCP
+                                 (real parallelism — no shared GIL)
+
+In BOTH cases the checkpoint control plane is wire-only: the launcher
+runs a `CoordinatorServer` on the world's reserved coordinator
+endpoint, and each rank talks to it through a `CoordinatorClient` —
+ranks never touch a shared coordinator object, so the same `fn` runs
+unchanged whether its world is threads or processes (the paper's
+network-agnosticism, reproduced at the harness level).
+
+`fn(ctx)` receives a `WorldContext` (rank, n, ep, agent, coord,
+transport) and returns a picklable result.  Socket ranks ship their
+result back to the launcher over the fabric itself on TAG_RESULT —
+the harness has no side channel the transport doesn't provide.
+
+Process start method is ``fork`` (closures over launcher state — e.g.
+a checkpoint image — reach the children without pickling); platforms
+without fork get a clear error and should run the "inproc" backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.comm.transport.base import TAG_RESULT, Endpoint
+from repro.comm.transport.inproc import InprocTransport
+from repro.comm.transport.tcp import FabricSwitch, SocketTransport
+from repro.core.control import (CoordinatorClient, CoordinatorServer,
+                                make_control_plane)
+
+
+@dataclasses.dataclass
+class WorldContext:
+    rank: int
+    n: int
+    ep: Endpoint
+    agent: Any                      # RankAgent
+    coord: CoordinatorClient
+    transport: Any
+
+
+@dataclasses.dataclass
+class WorldResult:
+    results: Dict[int, Any]         # rank -> fn(ctx) return value
+    vclocks: List[float]            # per-rank virtual clocks at exit
+    coord_stats: Dict               # coordinator stats snapshot
+    transport: str
+
+
+class WorldError(RuntimeError):
+    def __init__(self, errors):
+        super().__init__(f"{len(errors)} rank(s) failed: "
+                         + "; ".join(f"rank {r}: {e.splitlines()[-1]}"
+                                     for r, e in sorted(errors.items())[:3]))
+        self.errors = errors
+
+
+def _make_agent(rank: int, ep: Endpoint, coord, n: int, mode: str,
+                coll_algo: Optional[str], transport_name: str):
+    from repro.core.two_phase_commit import RankAgent
+    return RankAgent(rank, ep, coord, range(n), mode=mode,
+                     coll_algo=coll_algo, transport=transport_name)
+
+
+def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
+              msg_cost_us: float = 0.0, unblock_window: float = 0.5,
+              mode: str = "hybrid", coll_algo: Optional[str] = "tree",
+              timeout: float = 300.0,
+              on_running: Optional[Callable[[CoordinatorServer], None]] = None,
+              ) -> WorldResult:
+    """Run `fn` on every rank of a fresh `transport` world and tear the
+    world down.  Raises `WorldError` if any rank raised."""
+    if transport == "inproc":
+        return _run_inproc(n, fn, msg_cost_us, unblock_window, mode,
+                           coll_algo, timeout, on_running)
+    if transport == "socket":
+        return _run_socket(n, fn, msg_cost_us, unblock_window, mode,
+                           coll_algo, timeout, on_running)
+    from repro.comm.transport import available_transports
+    raise ValueError(f"unknown transport {transport!r}; "
+                     f"registered: {available_transports()}")
+
+
+# ---------------------------------------------------------------------------
+# inproc: threads
+# ---------------------------------------------------------------------------
+
+def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
+                timeout, on_running) -> WorldResult:
+    import threading
+
+    world = InprocTransport(n, msg_cost_us=msg_cost_us)
+    server, clients = make_control_plane(world,
+                                         unblock_window=unblock_window)
+    results: Dict[int, Any] = {}
+    errors: Dict[int, str] = {}
+
+    def work(r):
+        ep = world.endpoints[r]
+        coord = clients[r]
+        agent = _make_agent(r, ep, coord, n, mode, coll_algo, "inproc")
+        try:
+            results[r] = fn(WorldContext(r, n, ep, agent, coord, world))
+        except Exception:  # noqa: BLE001 — reported via WorldError
+            errors[r] = traceback.format_exc()
+
+    threads = [threading.Thread(target=work, args=(r,), daemon=True)
+               for r in range(n)]
+    for t in threads:
+        t.start()
+    if on_running is not None:
+        on_running(server)
+    deadline = time.monotonic() + timeout
+    for t in threads:
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    hung = [r for r, t in enumerate(threads) if t.is_alive()]
+    server.stop()
+    stats = dict(server.coord.stats)
+    vclocks = [ep.vclock for ep in world.endpoints]
+    world.close()
+    if hung:
+        errors.update({r: "rank hung (join timeout)" for r in hung})
+    if errors:
+        raise WorldError(errors)
+    return WorldResult(results, vclocks, stats, "inproc")
+
+
+# ---------------------------------------------------------------------------
+# socket: one forked OS process per rank
+# ---------------------------------------------------------------------------
+
+def _socket_child(rank, n, addr, fn, msg_cost_us, mode, coll_algo):
+    tr = SocketTransport(n, rank, addr, msg_cost_us=msg_cost_us)
+    ep = tr.endpoint
+    coord = CoordinatorClient(ep)
+    envelope: Dict[str, Any]
+    try:
+        agent = _make_agent(rank, ep, coord, n, mode, coll_algo, "socket")
+        out = fn(WorldContext(rank, n, ep, agent, coord, tr))
+        envelope = {"ok": out, "vclock": ep.vclock}
+    except Exception:  # noqa: BLE001 — shipped to the launcher
+        envelope = {"err": traceback.format_exc(), "vclock": ep.vclock}
+    ep.send(tr.coord_rank, pickle.dumps((rank, envelope)), TAG_RESULT)
+    time.sleep(0.05)  # let the frame flush before the fd closes
+    tr.close()
+
+
+def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
+                timeout, on_running) -> WorldResult:
+    import multiprocessing
+
+    try:
+        ctx = multiprocessing.get_context("fork")
+    except ValueError as e:  # platform without fork
+        raise RuntimeError(
+            "socket world harness needs the fork start method; "
+            "use the inproc backend on this platform") from e
+
+    switch = FabricSwitch()
+    coord_tr = SocketTransport(n, n, switch.addr)  # coordinator = rank n
+    server = CoordinatorServer(coord_tr.endpoint, n,
+                               unblock_window=unblock_window).start()
+    procs = [ctx.Process(target=_socket_child, daemon=True,
+                         args=(r, n, switch.addr, fn, msg_cost_us, mode,
+                               coll_algo))
+             for r in range(n)]
+    for p in procs:
+        p.start()
+    if on_running is not None:
+        on_running(server)
+    results: Dict[int, Any] = {}
+    errors: Dict[int, str] = {}
+    vclocks = [0.0] * n
+    deadline = time.monotonic() + timeout
+    try:
+        while len(results) + len(errors) < n:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                missing = sorted(set(range(n)) - set(results) - set(errors))
+                errors.update({r: "no result before timeout (rank hung "
+                                  "or crashed hard)" for r in missing})
+                break
+            try:
+                msg = coord_tr.endpoint.recv(None, TAG_RESULT,
+                                             timeout=min(remaining, 5.0))
+            except TimeoutError:
+                continue
+            rank, envelope = pickle.loads(msg.payload)
+            vclocks[rank] = envelope.get("vclock", 0.0)
+            if "err" in envelope:
+                errors[rank] = envelope["err"]
+            else:
+                results[rank] = envelope["ok"]
+    finally:
+        for p in procs:
+            p.join(timeout=10)
+        for p in procs:
+            if p.is_alive():
+                p.terminate()
+        server.stop()
+        stats = dict(server.coord.stats)
+        coord_tr.close()
+        switch.close()
+    if errors:
+        raise WorldError(errors)
+    return WorldResult(results, vclocks, stats, "socket")

@@ -1,0 +1,304 @@
+"""Socket transport backend ("socket"): one OS process per rank over
+loopback TCP.
+
+Escapes the GIL — each rank is a real process, so multi-rank runs get
+real parallelism — while keeping the exact fabric semantics: matching,
+byte counters, drain and the `msg_cost_us` virtual-time model all live
+in the shared `Endpoint`, and messages cross process boundaries as
+length-prefixed frames.
+
+Topology: a star through a rendezvous SWITCH rather than an O(n^2)
+connection mesh.  The switch is the world bootstrap point (its address
+is the only thing a rank needs to join the job — the "rendezvous
+server"), and it forwards frames between ranks:
+
+    rank process                switch (launcher process)
+    ------------                -------------------------
+    SocketTransport --HELLO r--> register conn[r], flush
+                                 any frames queued for r
+    Endpoint.send -> frame ----> look up conn[msg.dst] ---> dst's
+                                 (queue if not joined yet)   reader
+                                                             thread
+                                                             enqueues
+                                                             into the
+                                                             local
+                                                             indexed
+                                                             store
+
+Wire format (everything after the HELLO): a 4-byte big-endian length
+prefix, a 4-byte big-endian ``dst`` rank — so the switch routes on a
+fixed-offset header read and never unpickles payloads — followed by
+``pickle((src, tag, vtime, payload))``.  The ``vtime`` stamp crosses
+the wire so the virtual-time occupancy model stays deterministic
+across backends.
+
+The coordinator joins the same switch as rank ``n_ranks`` (one past the
+app world) — the control plane is wire-only, exactly like any other
+peer (see `repro.core.control`).
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import struct
+import threading
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.comm.transport.base import Endpoint, Message, Transport
+
+_LEN = struct.Struct(">I")
+_DST = struct.Struct(">I")
+
+
+def _send_frame(sock: socket.socket, blob: bytes) -> None:
+    sock.sendall(_LEN.pack(len(blob)) + blob)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None  # peer closed
+        buf += chunk
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket) -> Optional[bytes]:
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    return _recv_exact(sock, _LEN.unpack(head)[0])
+
+
+def _encode(msg: Message) -> bytes:
+    return (_DST.pack(msg.dst)
+            + pickle.dumps((msg.src, msg.tag, msg.vtime, msg.payload)))
+
+
+def _decode(blob: bytes) -> Message:
+    dst = _DST.unpack_from(blob)[0]
+    src, tag, vtime, payload = pickle.loads(blob[_DST.size:])
+    m = Message(src, dst, tag, payload)
+    m.vtime = vtime
+    return m
+
+
+class FabricSwitch:
+    """Rendezvous + frame forwarding for one job (runs in the launcher).
+
+    Accepts HELLO(rank) registrations and forwards every subsequent
+    frame to the destination rank's connection.  Frames addressed to a
+    rank that has not joined yet are queued and flushed at its HELLO —
+    so ranks may start (and send) in any order, which is the rendezvous
+    half of the world bootstrap.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(1024)
+        self.addr: Tuple[str, int] = self._listener.getsockname()
+        self._conns: Dict[int, socket.socket] = {}
+        self._wlocks: Dict[int, threading.Lock] = {}
+        self._pending: Dict[int, List[bytes]] = defaultdict(list)
+        self._departed: set = set()
+        self._lock = threading.Lock()
+        self._closed = False
+        self._threads: List[threading.Thread] = []
+        self._accept_thread = threading.Thread(target=self._accept_loop,
+                                               daemon=True)
+        self._accept_thread.start()
+
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return  # listener closed
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        hello = _recv_frame(conn)
+        if hello is None:
+            conn.close()
+            return
+        kind, rank = pickle.loads(hello)
+        assert kind == "hello", f"expected HELLO, got {kind!r}"
+        # register and flush the pre-join backlog while HOLDING the new
+        # connection's write lock (acquired inside the registry lock, so
+        # no _forward can have it yet): a frame forwarded directly the
+        # instant the conn becomes visible must not overtake queued
+        # older frames from the same source, or the per-(src, tag) FIFO
+        # contract breaks
+        with self._lock:
+            wlock = threading.Lock()
+            wlock.acquire()
+            self._conns[rank] = conn
+            self._wlocks[rank] = wlock
+            backlog = self._pending.pop(rank, [])
+        try:
+            for blob in backlog:
+                try:
+                    _send_frame(conn, blob)
+                except OSError:
+                    break
+        finally:
+            wlock.release()
+        while True:
+            blob = _recv_frame(conn)
+            if blob is None:
+                break  # rank exited
+            # dst rides in a fixed-offset header: route without
+            # unpickling the payload
+            self._forward(_DST.unpack_from(blob)[0], blob)
+        with self._lock:
+            if self._conns.get(rank) is conn:
+                del self._conns[rank]
+                self._wlocks.pop(rank, None)
+            # departed ranks take no more traffic: frames to them are
+            # dropped like a real NIC's, not queued forever
+            self._departed.add(rank)
+            self._pending.pop(rank, None)
+        conn.close()
+
+    def _forward(self, dst: int, blob: bytes) -> None:
+        with self._lock:
+            conn = self._conns.get(dst)
+            if conn is None:
+                if not self._closed and dst not in self._departed:
+                    self._pending[dst].append(blob)
+                return
+            wlock = self._wlocks[dst]
+        try:
+            with wlock:
+                _send_frame(conn, blob)
+        except OSError:
+            pass  # destination went away mid-write; drop like a real NIC
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        with self._lock:
+            conns = list(self._conns.values())
+            self._conns.clear()
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            c.close()
+
+
+class SocketTransport(Transport):
+    """One rank's view of the socket fabric (runs in the rank's process).
+
+    Owns exactly one local endpoint; `route` writes frames to the
+    switch, and a reader thread enqueues inbound frames into the
+    endpoint's indexed store.  Self-sends short-circuit locally (no
+    wire round trip), matching inproc semantics bit for bit.
+    """
+
+    name = "socket"
+
+    def __init__(self, n_ranks: int, rank: int, addr: Tuple[str, int],
+                 msg_cost_us: float = 0.0):
+        super().__init__(n_ranks, msg_cost_us)
+        self.rank = rank
+        self.endpoint = Endpoint(self, rank)
+        self._sock = socket.create_connection(addr, timeout=30)
+        self._sock.settimeout(None)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._wlock = threading.Lock()
+        with self._wlock:
+            _send_frame(self._sock, pickle.dumps(("hello", rank)))
+        self._closed = False
+        self._reader = threading.Thread(target=self._read_loop, daemon=True)
+        self._reader.start()
+
+    def _read_loop(self) -> None:
+        while True:
+            try:
+                blob = _recv_frame(self._sock)
+            except OSError:
+                return
+            if blob is None:
+                return  # switch closed
+            self.endpoint.enqueue(_decode(blob))
+
+    def route(self, msg: Message) -> None:
+        if msg.dst == self.rank:
+            self.endpoint.enqueue(msg)
+            return
+        if self._closed:
+            raise RuntimeError(f"rank {self.rank}: transport closed")
+        with self._wlock:
+            _send_frame(self._sock, _encode(msg))
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+        self._reader.join(timeout=5)
+
+
+class LoopbackSocketWorld(Transport):
+    """All ranks of a socket world hosted in ONE process (plus the
+    switch), each rank a `SocketTransport` client over real loopback
+    TCP.  Presents the same surface as `InprocTransport` (`endpoints`,
+    `coord_endpoint()`), so fabric-level conformance tests and the
+    single-rank `MANARuntime` can exercise the socket wire path without
+    spawning processes.  Multi-process execution is the world harness's
+    job (`repro.comm.transport.harness`).
+    """
+
+    name = "socket"
+
+    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0):
+        super().__init__(n_ranks, msg_cost_us)
+        self.switch = FabricSwitch()
+        self._clients = [SocketTransport(n_ranks, r, self.switch.addr,
+                                         msg_cost_us)
+                         for r in range(n_ranks)]
+        self.endpoints = [t.endpoint for t in self._clients]
+        self._coord_client: Optional[SocketTransport] = None
+        self._coord_lock = threading.Lock()
+
+    def coord_endpoint(self) -> Endpoint:
+        with self._coord_lock:
+            if self._coord_client is None:
+                self._coord_client = SocketTransport(
+                    self.n_ranks, self.coord_rank, self.switch.addr,
+                    self.msg_cost_s * 1e6)
+            return self._coord_client.endpoint
+
+    def route(self, msg: Message) -> None:
+        """Route on behalf of a local endpoint: each endpoint belongs to
+        its own SocketTransport client, so this is only reachable if an
+        endpoint was constructed against the world directly — which the
+        world never does."""
+        raise NotImplementedError(
+            "LoopbackSocketWorld endpoints route through their own "
+            "SocketTransport clients")
+
+    def close(self) -> None:
+        clients = list(self._clients)
+        if self._coord_client is not None:
+            clients.append(self._coord_client)
+        for c in clients:
+            c.close()
+        self.switch.close()

@@ -1,0 +1,288 @@
+"""Message-based checkpoint control plane: the coordinator as an
+ENDPOINT, not a shared object.
+
+Pre-transport, ranks called `Coordinator` methods directly — which only
+works because every rank is a thread in one process.  This module turns
+the coordinator<->rank interaction into a wire protocol on reserved
+control tags (`repro.comm.transport.base`: TAG_CTRL / TAG_INTENT, below
+the collective tag space), so drain, the hybrid 2PC and §III-J/K
+phase-1 closure run unchanged over ANY transport backend — threads,
+processes over TCP, or anything a future backend brings.
+
+  CoordinatorServer — owns the `Coordinator` state machine (unchanged:
+      same closure predicate, watchdog, epoch-adoption semantics) and
+      services requests arriving on its endpoint.  Blocking operations
+      (park, commit-wait, release-wait) are handed to per-request
+      worker threads so the serve loop never stalls — the coordinator
+      stays a CONTROL-plane-only component with O(1)-sized messages
+      (§III-M), and every state transition still happens under the one
+      coordinator lock.
+  CoordinatorClient — the rank-side stub.  Presents the exact
+      `Coordinator` surface `RankAgent` consumes (`intent_epoch`,
+      `register_comm`, `collective_enter/exit`, `try_park`,
+      `report_committed`, `wait_all_committed`, `wait_released`,
+      `last_closed_epoch`, `mark_dead`, `straggler_report`), so the
+      agent cannot tell a wire coordinator from a shared-memory one.
+
+Wire protocol (pickled dicts):
+  rank -> coord on TAG_CTRL:   {"op": ..., ...}
+  coord -> rank on TAG_CTRL:   one reply per BLOCKING op ({"error":
+      "aborted", ...} re-raises `CheckpointAborted` client-side);
+      fire-and-forget ops (register_comm, enter, exit, committed,
+      mark_dead) get no reply — per-(src, tag) FIFO order guarantees
+      the server observes them before any later blocking op from the
+      same rank.
+  coord -> rank on TAG_INTENT: {"epoch": e} pushes.  The client caches
+      the newest epoch and `intent_epoch` drains pending pushes with a
+      nonblocking claim — the wire analogue of the §III-I lock-free
+      intent flag (a single store lookup on the hot path, no round
+      trip).
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import traceback
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.comm.transport.base import TAG_CTRL, TAG_INTENT, Endpoint
+from repro.core.coordinator import CheckpointAborted, Coordinator
+
+# ops whose coordinator method blocks; served by a worker thread each
+_BLOCKING_OPS = ("park", "wait_all_committed", "wait_released",
+                 "request_ckpt", "straggler_report")
+# extra slack on the client's reply wait beyond the server-side timeout:
+# the server always answers (success, verdict, or aborted-error) within
+# its own deadline, so a client-side TimeoutError means the server died
+_REPLY_SLACK_S = 15.0
+
+
+class CoordinatorServer:
+    """Serves the checkpoint control plane over an endpoint.
+
+    The launcher owns this object: `coord` (the state machine and its
+    `stats`) stays inspectable from the launcher process, while ranks —
+    wherever they live — speak only messages.
+    """
+
+    def __init__(self, endpoint: Endpoint, n_ranks: int,
+                 unblock_window: float = 0.25):
+        self.ep = endpoint
+        self.n_ranks = n_ranks
+        self.coord = Coordinator(n_ranks, unblock_window=unblock_window)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._serve, daemon=True,
+                                        name="coordinator-server")
+
+    # ---- lifecycle ---------------------------------------------------------
+    def start(self) -> "CoordinatorServer":
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Signal the serve loop to exit (it wakes within its 0.5s recv
+        timeout).  timeout=0 returns without joining — used by GC-time
+        teardown where a join pause is unacceptable."""
+        self._stop.set()
+        if timeout > 0:
+            self._thread.join(timeout=timeout)
+
+    # ---- launcher-side convenience ----------------------------------------
+    def request_checkpoint(self) -> int:
+        """Trigger a checkpoint from the launcher (e.g. a preemption
+        notice): bump the epoch and push intent to every rank."""
+        epoch = self.coord.request_checkpoint()
+        self._push_intent(epoch)
+        return epoch
+
+    def straggler_report(self, threshold: float = 0.5) -> Dict:
+        return self.coord.straggler_report(threshold)
+
+    @property
+    def stats(self) -> Dict:
+        return self.coord.stats
+
+    # ---- serve loop --------------------------------------------------------
+    def _serve(self) -> None:
+        while not self._stop.is_set():
+            try:
+                # wakeups are event-driven (enqueue notifies the recv
+                # cv); the timeout only bounds stop() latency
+                msg = self.ep.recv(None, TAG_CTRL, timeout=0.5)
+            except TimeoutError:
+                continue
+            # the serve loop must survive any malformed request — a
+            # dead control plane turns into n ranks hanging on reply
+            # timeouts with no hint of the real error
+            try:
+                req = pickle.loads(msg.payload)
+            except Exception:  # noqa: BLE001
+                traceback.print_exc()
+                continue
+            if req.get("op") in _BLOCKING_OPS:
+                # one short-lived worker per blocking request.  Clients
+                # are synchronous (at most ONE blocking request in
+                # flight per rank), so concurrency is bounded by
+                # n_ranks; only creation churn scales with park retries
+                threading.Thread(target=self._handle, daemon=True,
+                                 args=(msg.src, req)).start()
+            else:
+                self._handle(msg.src, req)
+
+    def _reply(self, dst: int, rep: Dict) -> None:
+        self.ep.send(dst, pickle.dumps(rep), TAG_CTRL)
+
+    def _push_intent(self, epoch: int) -> None:
+        blob = pickle.dumps({"epoch": epoch})
+        for r in range(self.n_ranks):
+            self.ep.send(r, blob, TAG_INTENT)
+
+    def _handle(self, src: int, req: Dict) -> None:
+        op = req["op"]
+        c = self.coord
+        try:
+            if op == "register_comm":
+                c.register_comm(req["gid"], tuple(req["ranks"]))
+            elif op == "enter":
+                c.collective_enter(req["rank"], req["gid"], req["count"])
+            elif op == "exit":
+                c.collective_exit(req["rank"], req["gid"], req["count"])
+            elif op == "committed":
+                c.report_committed(req["rank"])
+            elif op == "mark_dead":
+                c.mark_dead(req["rank"])
+            elif op == "request_ckpt":
+                epoch = c.request_checkpoint()
+                self._push_intent(epoch)
+                self._reply(src, {"epoch": epoch})
+            elif op == "park":
+                verdict = c.try_park(req["rank"], req["epoch"],
+                                     req["exited"], timeout=req["timeout"])
+                self._reply(src, {"verdict": verdict,
+                                  "last_closed": c.last_closed_epoch})
+            elif op == "wait_all_committed":
+                c.wait_all_committed(req["epoch"], timeout=req["timeout"])
+                self._reply(src, {"ok": True})
+            elif op == "wait_released":
+                released = c.wait_released(req["epoch"],
+                                           timeout=req["timeout"])
+                self._reply(src, {"released": released})
+            elif op == "straggler_report":
+                self._reply(src, {"report": c.straggler_report(
+                    req["threshold"])})
+            else:
+                raise ValueError(f"unknown control op {op!r}")
+        except CheckpointAborted as e:
+            self._reply(src, {"error": "aborted", "msg": str(e)})
+        except Exception:  # noqa: BLE001 — ship it to the caller:
+            # a silent worker death leaves the rank hanging on a reply
+            self._reply(src, {"error": "server",
+                              "msg": traceback.format_exc()})
+
+
+class CoordinatorClient:
+    """Rank-side stub of the coordinator; speaks only messages.
+
+    One instance per rank (NOT thread-safe across ranks — exactly like
+    a rank's slice of the direct `Coordinator` API).  At most one
+    blocking request is in flight at a time, which is how `RankAgent`
+    drives the protocol, so a single per-rank reply FIFO suffices.
+    """
+
+    def __init__(self, endpoint: Endpoint, coord_rank: Optional[int] = None):
+        self.ep = endpoint
+        self.coord_rank = (endpoint.transport.coord_rank
+                           if coord_rank is None else coord_rank)
+        self._intent = 0
+        self._last_closed = 0
+
+    # ---- the §III-I hot path ----------------------------------------------
+    @property
+    def intent_epoch(self) -> int:
+        """Newest checkpoint epoch this rank has heard of.  Drains any
+        pending intent pushes nonblockingly — no coordinator round
+        trip on the steady-state path."""
+        while True:
+            msg = self.ep._claim(self.coord_rank, TAG_INTENT)
+            if msg is None:
+                break
+            self._intent = max(self._intent,
+                               pickle.loads(msg.payload)["epoch"])
+        return self._intent
+
+    @property
+    def last_closed_epoch(self) -> int:
+        """Newest closed epoch, piggybacked on the park verdict reply
+        (the rank only needs it right after a "safe" verdict)."""
+        return self._last_closed
+
+    # ---- plumbing ----------------------------------------------------------
+    def _send(self, req: Dict) -> None:
+        self.ep.send(self.coord_rank, pickle.dumps(req), TAG_CTRL)
+
+    def _call(self, req: Dict, timeout: float) -> Dict:
+        self._send(req)
+        msg = self.ep.recv(self.coord_rank, TAG_CTRL,
+                           timeout=timeout + _REPLY_SLACK_S)
+        rep = pickle.loads(msg.payload)
+        if rep.get("error") == "aborted":
+            raise CheckpointAborted(rep["msg"])
+        if rep.get("error"):
+            raise RuntimeError(f"coordinator server error:\n{rep['msg']}")
+        return rep
+
+    # ---- the Coordinator surface RankAgent consumes ------------------------
+    def request_checkpoint(self, timeout: float = 60.0) -> int:
+        rep = self._call({"op": "request_ckpt"}, timeout)
+        self._intent = max(self._intent, rep["epoch"])
+        return rep["epoch"]
+
+    def register_comm(self, gid: int, ranks: Sequence[int]) -> None:
+        self._send({"op": "register_comm", "gid": gid,
+                    "ranks": tuple(ranks)})
+
+    def collective_enter(self, rank: int, gid: int, entered: int) -> None:
+        self._send({"op": "enter", "rank": rank, "gid": gid,
+                    "count": entered})
+
+    def collective_exit(self, rank: int, gid: int, exited: int) -> None:
+        self._send({"op": "exit", "rank": rank, "gid": gid,
+                    "count": exited})
+
+    def try_park(self, rank: int, epoch: int, my_exited: Dict[int, int],
+                 timeout: float = 60.0) -> str:
+        rep = self._call({"op": "park", "rank": rank, "epoch": epoch,
+                          "exited": dict(my_exited), "timeout": timeout},
+                         timeout)
+        self._last_closed = max(self._last_closed, rep["last_closed"])
+        return rep["verdict"]
+
+    def report_committed(self, rank: int) -> None:
+        self._send({"op": "committed", "rank": rank})
+
+    def wait_all_committed(self, epoch: int, timeout: float = 120.0) -> None:
+        self._call({"op": "wait_all_committed", "epoch": epoch,
+                    "timeout": timeout}, timeout)
+
+    def wait_released(self, epoch: int, timeout: float = 120.0) -> bool:
+        rep = self._call({"op": "wait_released", "epoch": epoch,
+                          "timeout": timeout}, timeout)
+        return rep["released"]
+
+    def mark_dead(self, rank: int) -> None:
+        self._send({"op": "mark_dead", "rank": rank})
+
+    def straggler_report(self, threshold: float = 0.5,
+                         timeout: float = 30.0) -> Dict:
+        return self._call({"op": "straggler_report",
+                           "threshold": threshold}, timeout)["report"]
+
+
+def make_control_plane(world, unblock_window: float = 0.25,
+                       ) -> Tuple[CoordinatorServer, "list[CoordinatorClient]"]:
+    """Wire a coordinator server onto a transport world's reserved
+    endpoint and hand every local rank endpoint a client stub."""
+    server = CoordinatorServer(world.coord_endpoint(), world.n_ranks,
+                               unblock_window=unblock_window).start()
+    clients = [CoordinatorClient(ep) for ep in world.endpoints]
+    return server, clients

@@ -7,6 +7,13 @@ over the rank-to-rank fabric (§III-M).  Ranks poll `intent_epoch` with a
 single unlocked integer read — the analogue of MANA-2.0 replacing
 hot-path locks with cheap flags (§III-I).
 
+This class is the STATE MACHINE only.  Direct method calls are the
+in-process degenerate case (unit tests, workload benchmarks); real
+worlds talk to it through the wire protocol in `repro.core.control`
+(CoordinatorServer wraps an instance behind a fabric endpoint, ranks
+hold CoordinatorClient stubs), which is what makes the checkpoint
+protocol transport-agnostic.
+
 Phase-1 closure — the §III-J/§III-K problem.  Ranks reach their safe
 points at *different* step boundaries, so a parked rank can leave a peer
 blocked inside a collective it has not yet joined.  MANA-2.0 solves this

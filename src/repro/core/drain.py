@@ -23,7 +23,7 @@ which is both O(ranks) coordinator traffic per round and unable to say
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.comm import collectives as coll
 from repro.comm.fabric import Endpoint
@@ -34,7 +34,7 @@ class DrainError(RuntimeError):
 
 
 def drain_rank(ep: Endpoint, ranks: Sequence[int], gid: int = 0,
-               timeout: float = 30.0, algo: str = None) -> Dict:
+               timeout: float = 30.0, algo: Optional[str] = None) -> Dict:
     """Run the §III-B drain for one rank (call concurrently on all ranks).
 
     `algo` selects the collective algorithm for the bookkeeping alltoall

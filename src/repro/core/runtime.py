@@ -20,15 +20,15 @@ from __future__ import annotations
 
 import signal
 import time
+import weakref
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
-from repro.comm.fabric import Fabric
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core.checkpoint import CheckpointManager
-from repro.core.coordinator import Coordinator
+from repro.core.control import make_control_plane
 from repro.core.split_state import LowerHalf
 from repro.core.two_phase_commit import RankAgent
 from repro.data.pipeline import SyntheticDataset
@@ -42,30 +42,46 @@ class MANARuntime:
                  ckpt_every_secs: Optional[float] = None,
                  keep: int = 3, quantize_moments: bool = False,
                  delta_params: bool = False, seed: int = 0,
-                 install_signal_handler: bool = False):
+                 install_signal_handler: bool = False,
+                 transport: str = "inproc"):
         self.cfg, self.rc = cfg, rc
         self.seed = seed
-        self.lower = LowerHalf.build(cfg, rc, mesh)     # lower half: rebuilt
+        # lower half: rebuilt at restart — including the comm world, so
+        # a checkpoint taken over one transport restores over another
+        self.lower = LowerHalf.build(cfg, rc, mesh, transport=transport)
         _, self.logical = abstract_params(cfg)
         self.dataset = SyntheticDataset(cfg, rc.shape, seed=seed)
         self.ckpt = CheckpointManager(
             ckpt_dir, keep=keep,
             quantize_keys=("opt/m", "opt/v") if quantize_moments else (),
             delta_keys=("params",) if delta_params else ())
-        # protocol plane (1 real rank in-process; protocol is rank-agnostic)
-        self.fabric = Fabric(1)
-        self.coord = Coordinator(1)
+        # protocol plane (1 real rank; protocol is rank-agnostic).  The
+        # coordinator is an ENDPOINT on the fabric, not a shared object:
+        # the runtime talks to it through the same wire protocol a
+        # thousand-rank socket job would use (repro.core.control).
+        self.fabric = self.lower.comm
+        self.coord_server, clients = make_control_plane(self.fabric)
+        self.coord = clients[0]
         self.agent = RankAgent(0, self.fabric.endpoints[0], self.coord,
-                               [0], mode=mode)
+                               [0], mode=mode, transport=transport)
+        # server thread + sockets die with the runtime even if close()
+        # is never called (tests churn through many runtimes)
+        self._finalizer = weakref.finalize(
+            self, MANARuntime._teardown, self.coord_server, self.fabric)
         self.ckpt_every_steps = ckpt_every_steps
         self.ckpt_every_secs = ckpt_every_secs
         self._last_ckpt_time = time.monotonic()
         self.state: Any = None
         self.history: List[Dict] = []
         self.checkpoints_taken = 0
+        # the handler only sets a flag: requesting a checkpoint is now a
+        # WIRE call (send + blocking reply on this rank's endpoint), and
+        # a signal landing while the main thread holds that endpoint's
+        # lock would self-deadlock if the handler called it directly
+        self._preempted = False
         if install_signal_handler:
             signal.signal(signal.SIGUSR1,
-                          lambda *_: self.request_checkpoint())
+                          lambda *_: setattr(self, "_preempted", True))
 
     # ---- lifecycle -----------------------------------------------------------
     def initialize(self) -> None:
@@ -81,8 +97,8 @@ class MANARuntime:
 
     def restore(self, step: Optional[int] = None) -> int:
         """Elastic restart: rebind the upper half onto THIS lower half
-        (which may have a different mesh shape than the writer's)."""
-        specs = {"params": None, "opt": None, "step": None}
+        (which may have a different mesh shape — or a different
+        transport — than the writer's)."""
         state, extra = self.ckpt.restore(
             step, mesh=self.lower.mesh,
             specs=self.lower.state_specs if self.lower.mesh is not None
@@ -103,6 +119,19 @@ class MANARuntime:
     def request_checkpoint(self) -> None:
         self.coord.request_checkpoint()
 
+    @staticmethod
+    def _teardown(server, fabric) -> None:
+        # GC-safe: signal the serve loop without joining (it exits
+        # within its recv timeout) and release backend resources
+        server.stop(timeout=0)
+        fabric.close()
+
+    def close(self) -> None:
+        """Tear down the lower half's physical comm resources (sockets,
+        server thread).  Also runs automatically when the runtime is
+        garbage-collected."""
+        self._finalizer()
+
     # ---- snapshot (phase-2 payload) --------------------------------------------
     def _snapshot(self) -> None:
         step = int(np.asarray(jax.device_get(self.state["step"])))
@@ -118,7 +147,10 @@ class MANARuntime:
 
     # ---- the loop -----------------------------------------------------------------
     def _maybe_trigger(self, step: int) -> None:
-        if (self.ckpt_every_steps and step > 0
+        if self._preempted:  # SIGUSR1 landed since the last boundary
+            self._preempted = False
+            self.request_checkpoint()
+        elif (self.ckpt_every_steps and step > 0
                 and step % self.ckpt_every_steps == 0):
             self.request_checkpoint()
         elif (self.ckpt_every_secs is not None

@@ -10,11 +10,14 @@ physical resources:
 Lower half — NEVER checkpointed, rebuilt from scratch at restart:
   * jax.Device handles, Mesh, NamedShardings
   * compiled executables (train_step/serve_step lower+compile)
-  * the message fabric / real collective channels
+  * the message fabric / real collective channels — a transport WORLD
+    picked by name from the registry (`repro.comm.transport`), so a
+    checkpoint written over one backend restores over another
 
 `LowerHalf.build()` is the restart path's "start the lower-half program
 and map the upper half back in": it constructs mesh + rules + jitted
-steps for ANY topology, which is what makes restarts elastic.
+steps for ANY topology — and the comm world for ANY transport — which
+is what makes restarts elastic AND network-agnostic.
 """
 from __future__ import annotations
 
@@ -42,14 +45,21 @@ class LowerHalf:
     rules: Optional[ShardingRules]
     train_step: Callable
     state_specs: Optional[Any]
+    # the comm substrate (a transport world from the registry); like the
+    # mesh, it is physical state — never serialized, rebuilt at restart
+    comm: Optional[Any] = None
+    transport: str = "inproc"
 
     @classmethod
-    def build(cls, cfg: ModelConfig, rc: RunConfig, mesh=None) -> "LowerHalf":
+    def build(cls, cfg: ModelConfig, rc: RunConfig, mesh=None,
+              transport: str = "inproc", n_ranks: int = 1) -> "LowerHalf":
+        from repro.comm.transport import create_world
         from repro.training.step import make_train_step, train_state_specs
 
+        comm = create_world(transport, n_ranks)
         if mesh is None:
             return cls(None, None, jax.jit(make_train_step(cfg, rc, None)),
-                       None)
+                       None, comm, transport)
         rules = ShardingRules(mesh, moe_mode=rc.moe_mode,
                               seq_shard=rc.seq_shard,
                               kv_time_shard=rc.kv_time_shard)
@@ -64,4 +74,4 @@ class LowerHalf:
         step = jax.jit(make_train_step(cfg, rc, rules),
                        in_shardings=(shard(specs), None),
                        out_shardings=(shard(specs), None))
-        return cls(mesh, rules, step, specs)
+        return cls(mesh, rules, step, specs, comm, transport)

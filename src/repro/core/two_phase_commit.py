@@ -43,12 +43,19 @@ class RankAgent:
 
     def __init__(self, rank: int, ep: Endpoint, coordinator: Coordinator,
                  world: Sequence[int], mode: str = "hybrid",
-                 coll_algo: str = None):
+                 coll_algo: Optional[str] = None,
+                 transport: str = "inproc"):
         assert mode in ("mana1", "nobarrier", "hybrid")
         self.rank = rank
         self.ep = ep
+        # a shared-memory `Coordinator` (the in-process degenerate case)
+        # or a `repro.core.control.CoordinatorClient` stub speaking the
+        # wire protocol — the agent cannot tell them apart
         self.coord = coordinator
         self.mode = mode
+        # which fabric backend this agent runs over; recorded in every
+        # checkpoint image so a restore can prove it crossed transports
+        self.transport = transport
         # collective algorithm ("tree" | "linear"; None = module default)
         # — must agree across all ranks of a job
         self.coll_algo = coll_algo
@@ -201,6 +208,7 @@ class RankAgent:
     # ---- serialization (upper half) -----------------------------------------------
     def serialize(self) -> Dict:
         return {"rank": self.rank,
+                "transport": self.transport,
                 "comms": self.comms.serialize(),
                 "requests": self.requests.serialize(),
                 "coll_counts": dict(self.coll_counts),

@@ -31,6 +31,9 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--mode", default="hybrid",
                     choices=["hybrid", "mana1", "nobarrier"])
+    ap.add_argument("--transport", default="inproc",
+                    help="fabric backend for the protocol plane "
+                         "(see repro.comm.transport registry)")
     ap.add_argument("--quantize-moments", action="store_true")
     ap.add_argument("--delta-params", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
@@ -52,7 +55,8 @@ def main() -> None:
                      ckpt_every_secs=args.ckpt_every_secs,
                      quantize_moments=args.quantize_moments,
                      delta_params=args.delta_params, seed=args.seed,
-                     install_signal_handler=True)
+                     install_signal_handler=True,
+                     transport=args.transport)
     if args.resume and rt.ckpt.latest_step() is not None:
         start = rt.restore()
         print(f"resumed from step {start}")
@@ -64,6 +68,7 @@ def main() -> None:
         print(json.dumps(h))
     print(f"checkpoints taken: {rt.checkpoints_taken}; "
           f"dir: {sorted(rt.ckpt.steps())}")
+    rt.close()
 
 
 if __name__ == "__main__":
