@@ -11,6 +11,9 @@ simulated fabric (CSV rows; collected by benchmarks.run).
       tree vs linear collective algorithms, at 4..256 ranks.
   barrier_latency — per-barrier latency vs rank count and algorithm.
   drain_scaling — §III-B alltoall drain vs MANA-1 centralized drain.
+  recovery_latency — supervised chaos recovery: one injected rank
+      kill, detection -> restarted-world-running latency and the
+      end-to-end supervised wall time (ISSUE 3).
   transport_collective_rates — the fig4 harness run through the world
       harness on a NAMED transport backend (one OS process per rank
       for "socket"), emitting records tagged with the transport.  The
@@ -273,6 +276,91 @@ def transport_collective_rates(transport: str, ranks=(4, 8), iters=8,
                     "collectives_per_sec_per_rank": per_sec,
                     "virtual_us_per_iter": 1e6 * vtotal / iters,
                     "wall_s": wall_s})
+    return rows
+
+
+def recovery_latency(transport: str = "inproc", n: int = 8,
+                     results: Optional[List[Dict]] = None) -> List[str]:
+    """Supervised chaos recovery (ISSUE 3): a ring job checkpoints,
+    one rank is killed by fault injection, and the supervisor restarts
+    the world from the last committed image.  Reports wall-clock
+    detection->running recovery latency and the end-to-end supervised
+    wall time — the operational cost of surviving a rank failure."""
+    from repro.comm.transport import FaultPlan
+    from repro.comm.transport.harness import (restore_agent_from_blob,
+                                              run_world_supervised)
+
+    def fn_factory(attempt, image):
+        snaps = None if image is None else image["ranks"]
+
+        def work(ctx):
+            a, r = ctx.agent, ctx.rank
+            if snaps is None:
+                start, recvd = 0, 0
+            else:
+                blob = snaps[str(r)]
+                restore_agent_from_blob(ctx, blob["agent"])
+                for vid, ranks in a.comms.active().items():
+                    if tuple(ranks) == tuple(range(ctx.n)):
+                        a.world_comm = vid
+                start, recvd = blob["step"] + 1, blob["recvd"]
+            step = start
+
+            def snapshot():
+                ctx.coord.ship_snapshot(a.ckpt_epoch, {
+                    "step": step, "recvd": recvd, "agent": a.serialize()})
+
+            for step in range(start, 12):
+                if r == 0 and step and step % 3 == 0:
+                    ctx.coord.request_checkpoint()
+                a.send((r + 1) % ctx.n, step.to_bytes(4, "big"), tag=0)
+                while recvd <= step - 2:
+                    a.recv((r - 1) % ctx.n, timeout=60)
+                    recvd += 1
+                pending = a._ckpt_pending()
+                if ctx.faults is not None:
+                    ctx.faults.on_step(r, step, ckpt_pending=pending)
+                if pending:
+                    a.safe_point(snapshot)
+                if step == 5 and start == 0:
+                    # settle the step-3 epoch so the injected kill at
+                    # step 7 is ordered after a COMMITTED image exists
+                    # (the benchmark measures recovery-from-image, not
+                    # recovery-from-scratch)
+                    while a.done_epoch < 1:
+                        if a._ckpt_pending():
+                            a.safe_point(snapshot)
+                        time.sleep(0.001)
+            a.barrier_op(a.world_comm)
+            while a._ckpt_pending():
+                a.safe_point(snapshot)
+                time.sleep(0.002)
+            while recvd < 12:
+                a.recv((r - 1) % ctx.n, timeout=60)
+                recvd += 1
+            return recvd
+
+        return work
+
+    t0 = time.perf_counter()
+    sup = run_world_supervised(
+        transport, n, fn_factory, max_restarts=2,
+        faults_for_attempt=lambda a: (FaultPlan(0).kill(n // 2, at_step=7)
+                                      if a == 0 else None),
+        unblock_window=0.25, timeout=120)
+    wall_s = time.perf_counter() - t0
+    assert len(sup.failures) == 1 and sup.attempts == 2
+    assert sup.failures[0]["image_epoch"] is not None, \
+        "recovery must restart from a committed image"
+    rec_s = sup.failures[0].get("recovery_s", 0.0)
+    rows = [f"recovery_latency_{transport}_n{n},{1e6 * rec_s:.0f},"
+            f"supervised_wall_s={wall_s:.2f};"
+            f"image_epoch={sup.failures[0]['image_epoch']}"]
+    if results is not None:
+        results.append({"name": "recovery_latency", "transport": transport,
+                        "n": n, "recovery_s": rec_s,
+                        "supervised_wall_s": wall_s,
+                        "image_epoch": sup.failures[0]["image_epoch"]})
     return rows
 
 

@@ -50,6 +50,9 @@ def main() -> None:
         # loopback TCP; virtual rates must match inproc at the same n
         rows += protocol_benchmarks.transport_collective_rates(
             "socket", ranks=(4, 8), results=results)
+        # supervised rank-failure recovery over real processes
+        rows += protocol_benchmarks.recovery_latency(
+            "socket", results=results)
     if transport == "socket":
         pass  # socket-only run: skip the inproc suites below
     elif smoke:
@@ -59,6 +62,8 @@ def main() -> None:
             ranks=(8, 64), iters=20, results=results)
         rows += protocol_benchmarks.drain_scaling(
             ranks=(4, 8, 64), results=results)
+        rows += protocol_benchmarks.recovery_latency(
+            "inproc", results=results)
     else:
         from benchmarks import kernel_bench, roofline
 
@@ -75,6 +80,8 @@ def main() -> None:
         rows += protocol_benchmarks.drain_scaling(
             ranks=(4, 8) if quick else (4, 8, 16, 32, 64, 128, 256),
             results=results)
+        rows += protocol_benchmarks.recovery_latency(
+            "inproc", results=results)
         rows += kernel_bench.kernel_throughput(mb=4 if quick else 16)
         rows += roofline.rows()
 

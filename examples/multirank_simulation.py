@@ -35,19 +35,21 @@ socket -> inproc at 64 ranks.
 import argparse
 import json
 import os
+import random
 import sys
 import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.comm.transport import available_transports
-from repro.comm.transport.base import Message
-from repro.comm.transport.harness import run_world
-from repro.core.virtual import VirtualCommTable, comm_gid
+from repro.comm.transport import FaultPlan, available_transports
+from repro.comm.transport.harness import (restore_agent_from_blob,
+                                          run_world, run_world_supervised)
 
 STEPS_A, STEPS_B, LAG = 10, 6, 2
 CKPT_STEP_A, CKPT_STEP_B = 4, 3
+# --chaos mode: training horizon, checkpoint cadence, injected kills
+CHAOS_STEPS, CHAOS_CKPT_EVERY, CHAOS_KILLS = 24, 6, 3
 
 
 def parse_args():
@@ -63,10 +65,27 @@ def parse_args():
                    help="transport the job is restored under")
     p.add_argument("--image", default=None,
                    help="checkpoint image path (default: a temp file)")
+    p.add_argument("--chaos", action="store_true",
+                   help="supervised chaos mode: seeded rank kills + "
+                        "auto-restart from the last committed image")
+    p.add_argument("--seed", type=int, default=0,
+                   help="chaos fault-schedule seed (reproduces exactly)")
+    p.add_argument("--kills", type=int, default=CHAOS_KILLS,
+                   help="number of injected rank kills to survive")
+    p.add_argument("--flip-transport", action="store_true",
+                   help="chaos restarts alternate between transport-a "
+                        "and transport-b (cross-backend recovery)")
+    p.add_argument("--log-dir", default=None,
+                   help="chaos mode: write attempt records, the failing "
+                        "seed and the last image here (CI artifacts)")
     args = p.parse_args()
     if args.ranks is None:
-        args.ranks = int(os.environ.get("MANA_DEMO_RANKS",
-                                        "32" if args.quick else "256"))
+        if args.chaos:
+            args.ranks = int(os.environ.get("MANA_DEMO_RANKS",
+                                            "16" if args.quick else "64"))
+        else:
+            args.ranks = int(os.environ.get("MANA_DEMO_RANKS",
+                                            "32" if args.quick else "256"))
     return args
 
 
@@ -174,20 +193,12 @@ def make_phase_b(n, snaps, from_transport, to_transport):
         # §III-C restore: rebind the virtual comm table onto THIS
         # world's endpoint (the new network), re-register gids, restore
         # collective counts, re-append drained messages for replay.
+        restore_agent_from_blob(ctx, blob)
         # App-held comm HANDLES come from the image (vids are stable
         # across restore); membership can't distinguish identically-
         # membered comms, e.g. a row as wide as the world.
-        a.comms = VirtualCommTable.restore(
-            blob["comms"], real_factory=lambda ranks: ep)
-        for ranks in a.comms.active().values():
-            ctx.coord.register_comm(comm_gid(tuple(ranks)), tuple(ranks))
         a.world_comm = snaps[r]["world_comm"]
         a.row = snaps[r]["row"]
-        a.coll_counts.update({int(g): c
-                              for g, c in blob["coll_counts"].items()})
-        for src, dst, tag, hexpayload in blob["drain_buffer"]:
-            ep.drain_buffer.append(
-                Message(src, dst, tag, bytes.fromhex(hexpayload)))
         # 1) replay the backlog out of the drain buffer: sequence
         #    numbers must continue exactly at the cut (closure check:
         #    predecessor's sends minus our receives at ITS cut step)
@@ -252,8 +263,185 @@ def phase_b(n, transport, image_path):
           f"checkpoint; coordinator stats: {res.coord_stats}")
 
 
+# ---------------------------------------------------------------------------
+# --chaos: seeded rank kills + supervised auto-restart from the last
+# committed image (the NERSC-production reliability scenario)
+# ---------------------------------------------------------------------------
+
+def make_chaos_worker(n, image, target, ckpt_every):
+    """One incarnation of the chaos training job: a pipelined ring
+    (receives lag sends, so messages are ALWAYS in flight) plus per-row
+    allreduces, checkpointing every `ckpt_every` steps.  Each commit
+    ships the rank's snapshot to the launcher-side image collector —
+    the snapshot must NOT live in rank memory, because a killed rank's
+    memory is gone.  With `image`, the incarnation resumes from the
+    cut: comms rebound, drained messages re-delivered, and every
+    receive asserts the ring sequence continues exactly where the cut
+    happened."""
+    row_w = row_width(n)
+    snaps = None if image is None else image["ranks"]
+
+    def work(ctx):
+        a, r = ctx.agent, ctx.rank
+        prev = (r - 1) % n
+        if snaps is None:
+            start = recvd = 0
+            base = (r // row_w) * row_w
+            a.row = a.create_comm(range(base, base + row_w))
+        else:
+            blob = snaps[str(r)]
+            restore_agent_from_blob(ctx, blob["agent"])
+            a.world_comm = blob["world_comm"]
+            a.row = blob["row"]
+            start, recvd = blob["step"] + 1, blob["recvd"]
+        step = start
+
+        def snapshot():
+            # shipped at commit time under the ADOPTED epoch; JSON-safe
+            ctx.coord.ship_snapshot(a.ckpt_epoch, {
+                "step": step, "recvd": recvd, "world_comm": a.world_comm,
+                "row": a.row, "agent": a.serialize()})
+
+        for step in range(start, target):
+            # cadence checkpoints, plus an early post-restart one (a
+            # fresh incarnation re-establishes its recovery point
+            # immediately instead of waiting out the cadence)
+            if r == 0 and step and (step % ckpt_every == 0
+                                    or step == start + 1):
+                ctx.coord.request_checkpoint()
+            a.send((r + 1) % n, payload(r, step), tag=0)
+            while recvd <= step - LAG:
+                m = a.recv(prev, timeout=120)
+                assert m.payload == payload(prev, recvd), (r, recvd)
+                recvd += 1
+            a.allreduce(a.row, 1, lambda x, y: x + y)
+            # sample intent ONCE and gate the park on the same sample:
+            # the fault hook observes `pending` strictly before any park
+            # under it, so a when_pending kill deterministically fires
+            # on a rank that has seen checkpoint intent but not yet
+            # parked — phase 1 is open by construction (closure needs
+            # this rank parked)
+            pending = a._ckpt_pending()
+            if ctx.faults is not None:
+                ctx.faults.on_step(r, step, ckpt_pending=pending)
+            if pending:
+                a.safe_point(snapshot)
+        a.barrier_op(a.world_comm)
+        while a._ckpt_pending():
+            if ctx.faults is not None:
+                ctx.faults.on_step(r, step, ckpt_pending=True)
+            a.safe_point(snapshot)
+            time.sleep(0.002)
+        while recvd < target:  # pipeline tail (and any replayed drain)
+            m = a.recv(prev, timeout=120)
+            assert m.payload == payload(prev, recvd), (r, recvd)
+            recvd += 1
+        return {"start": start, "step": target, "recvd": recvd}
+
+    return work
+
+
+def chaos_schedule(seed, n, kills, target):
+    """The seeded fault schedule: attempt i < kills injects one rank
+    kill (attempt 1 is the mid-phase-1 variant: the victim dies after
+    observing checkpoint intent but before parking, while a straggler
+    in another row deterministically holds phase 1 open); later
+    attempts run fault-free.  Reproduces exactly from (seed, n,
+    kills)."""
+    row_w = row_width(n)
+    plans = {}
+    for attempt in range(kills):
+        rng = random.Random((seed, attempt))
+        plan = FaultPlan(seed)
+        victim = rng.randrange(n)
+        if attempt == 1 and kills > 1:
+            straggler = ((victim + row_w) % n if n > row_w
+                         else (victim + 1) % n)
+            plan.kill(victim, at_step=0, when_pending=True)
+            plan.straggle(straggler, at_step=0, seconds=0.7,
+                          when_pending=True)
+            plans[attempt] = (plan, victim, "mid-phase-1")
+        else:
+            step = rng.randrange(2, target - 2)
+            plan.kill(victim, at_step=step)
+            plans[attempt] = (plan, victim, f"step {step}")
+    return plans
+
+
+def chaos_main(args):
+    n, seed, kills = args.ranks, args.seed, args.kills
+    target, every = CHAOS_STEPS, CHAOS_CKPT_EVERY
+    transports = ([args.transport_a, args.transport_b]
+                  if args.flip_transport else args.transport_a)
+    schedule = chaos_schedule(seed, n, kills, target)
+    resume_steps = []   # min resume step per attempt (0 = cold start)
+
+    def fn_factory(attempt, image):
+        resume = (0 if image is None else 1 + min(
+            int(b["step"]) for b in image["ranks"].values()))
+        resume_steps.append(resume)
+        what = (f"kill rank {schedule[attempt][1]} at "
+                f"{schedule[attempt][2]}" if attempt in schedule
+                else "no faults")
+        print(f">>> chaos attempt {attempt}: resume step {resume} "
+              f"(image epoch {image['epoch'] if image else None}), "
+              f"{what}")
+        return make_chaos_worker(n, image, target, every)
+
+    t0 = time.perf_counter()
+    print(f"=== {n}-rank CHAOS run: seed {seed}, {kills} injected kills, "
+          f"checkpoint every {every} steps, transport(s) {transports} ===")
+    sup = run_world_supervised(
+        transports, n, fn_factory, max_restarts=kills + 2,
+        faults_for_attempt=lambda a: schedule.get(a, (None,))[0],
+        unblock_window=0.5, timeout=300, log_dir=args.log_dir)
+
+    # every rank finished the horizon with the ring sequence intact
+    assert len(sup.result.results) == n
+    assert all(v["step"] == target and v["recvd"] == target
+               for v in sup.result.results.values())
+    assert len(sup.failures) == kills, sup.failures
+    # bounded lost work: after a kill at step K, the next incarnation
+    # resumes within at most 2 checkpoint intervals of K (the committed
+    # interval plus the epoch that was in flight at the failure)
+    for f in sup.failures:
+        attempt = f["attempt"]
+        plan, victim, what = schedule[attempt]
+        assert f["failed_ranks"] == [victim], f
+        if what.startswith("step"):
+            fired = max(int(what.split()[1]), resume_steps[attempt])
+            lost = fired - resume_steps[attempt + 1]
+            assert lost <= 2 * every + 2, (f, fired, resume_steps)
+    assert all(a <= b for a, b in zip(resume_steps, resume_steps[1:])), \
+        resume_steps  # progress is monotone: restarts never lose ground
+    recoveries = [f.get("recovery_s") for f in sup.failures]
+    print(f">>> chaos: survived {kills} kills in {sup.attempts} attempts; "
+          f"resume steps {resume_steps}; recovery latencies "
+          f"{[round(x, 3) for x in recoveries if x is not None]}s")
+    print(f"PASS ({time.perf_counter() - t0:.1f}s)")
+
+
 def main():
     args = parse_args()
+    if args.chaos:
+        try:
+            chaos_main(args)
+        except BaseException:
+            if args.log_dir:
+                os.makedirs(args.log_dir, exist_ok=True)
+                repro = (f"python examples/multirank_simulation.py "
+                         f"--chaos --ranks {args.ranks} "
+                         f"--seed {args.seed} --kills {args.kills} "
+                         f"--transport-a {args.transport_a} "
+                         f"--transport-b {args.transport_b}"
+                         + (" --flip-transport" if args.flip_transport
+                            else "")
+                         + (" --quick" if args.quick else ""))
+                with open(os.path.join(args.log_dir,
+                                       "failing_seed.txt"), "w") as f:
+                    f.write(f"seed={args.seed}\nrepro: {repro}\n")
+            raise
+        return
     n = args.ranks
     image_path = args.image or os.path.join(
         tempfile.mkdtemp(prefix="mana_image_"), "ckpt_image.json")

@@ -27,7 +27,10 @@ from typing import Callable, Dict, Tuple
 
 from repro.comm.transport.base import (  # noqa: F401
     CTRL_BASE, TAG_CTRL, TAG_INTENT, TAG_RESULT,
-    Endpoint, Message, Transport, is_ctrl_tag,
+    Endpoint, Message, Transport, TransportClosed, is_ctrl_tag,
+)
+from repro.comm.transport.faults import (  # noqa: F401
+    FaultPlan, RankKilled,
 )
 from repro.comm.transport.inproc import InprocTransport
 from repro.comm.transport.tcp import (  # noqa: F401
@@ -45,14 +48,17 @@ def available_transports() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def create_world(name: str, n_ranks: int, msg_cost_us: float = 0.0) -> Transport:
-    """Instantiate a transport world by registry name."""
+def create_world(name: str, n_ranks: int, msg_cost_us: float = 0.0,
+                 fault_plan=None) -> Transport:
+    """Instantiate a transport world by registry name.  `fault_plan`
+    (a `repro.comm.transport.faults.FaultPlan`) installs deterministic
+    fault injection on the world's endpoints."""
     try:
         factory = _REGISTRY[name]
     except KeyError:
         raise ValueError(f"unknown transport {name!r}; "
                          f"registered: {available_transports()}") from None
-    return factory(n_ranks, msg_cost_us=msg_cost_us)
+    return factory(n_ranks, msg_cost_us=msg_cost_us, fault_plan=fault_plan)
 
 
 register_transport("inproc", InprocTransport)

@@ -64,6 +64,12 @@ def is_ctrl_tag(tag: int) -> bool:
     return tag <= CTRL_BASE
 
 
+class TransportClosed(RuntimeError):
+    """Raised out of blocking endpoint operations after the endpoint is
+    poisoned — the harness's way of promptly unwinding rank threads
+    that would otherwise block forever on messages from a dead peer."""
+
+
 @dataclass
 class Message:
     src: int
@@ -255,9 +261,13 @@ class Transport:
 
     name = "abstract"
 
-    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0):
+    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0,
+                 fault_plan=None):
         self.n_ranks = n_ranks
         self.msg_cost_s = msg_cost_us * 1e-6
+        # deterministic fault injection (repro.comm.transport.faults);
+        # None = no faults.  Consulted by Endpoint.send for app traffic.
+        self.fault_plan = fault_plan
 
     # the coordinator endpoint's rank id (one past the app world)
     @property
@@ -302,6 +312,14 @@ class Endpoint:
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._store = _IndexedStore()
+        # fault injection (see Transport.fault_plan): app-send sequence
+        # number (the deterministic per-message fault key) and the
+        # delayed-delivery worker (created on the first delayed send)
+        self._send_seq = 0
+        self._fault_q: Optional[deque] = None
+        self._fault_cv = threading.Condition()
+        self._fault_stop = False
+        self._poisoned: Optional[str] = None
 
     @property
     def fabric(self) -> Transport:
@@ -320,7 +338,18 @@ class Endpoint:
 
     # ---- send side ---------------------------------------------------------
     def send(self, dst: int, payload: bytes, tag: int = 0) -> None:
-        """Buffered send (the Isend-with-immediate-completion model)."""
+        """Buffered send (the Isend-with-immediate-completion model).
+
+        Fault injection acts here, at the backend-agnostic boundary:
+        control-plane traffic is exempt and does not advance the fault
+        sequence number (its volume is timing-dependent, and counting
+        it would break cross-run determinism of the fault schedule).
+        """
+        plan = self.transport.fault_plan
+        faulted = plan is not None and not is_ctrl_tag(tag)
+        if faulted:
+            # the kill fires BEFORE counters: the message never left
+            plan.check_kill_send(self.rank, self._send_seq)
         msg = Message(self.rank, dst, tag, payload)
         if tag >= 0:  # internal/protocol traffic (tag<0) is not app state
             self.sent_bytes[dst] += msg.nbytes
@@ -329,7 +358,82 @@ class Endpoint:
             # receiver's clock advance observes it
             self.vclock += self.transport.msg_cost_s
             msg.vtime = self.vclock
+        if not faulted:
+            self.transport.route(msg)
+            return
+        decision = plan.decide(self.rank, dst, tag, self._send_seq)
+        self._send_seq += 1
+        if decision.action == "drop":
+            return  # accounted but never delivered (lost on the wire)
+        if decision.action == "delay" or self._fault_q is not None:
+            # once a delay worker exists, ALL later sends go through it:
+            # a delayed message blocks the sender's subsequent traffic
+            # behind it (an in-order slow link), preserving per-sender
+            # FIFO — the fabric contract is delay-invariant
+            self._fault_enqueue(msg, decision.delay_s,
+                                dup=decision.action == "dup")
+            return
         self.transport.route(msg)
+        if decision.action == "dup":
+            self.transport.route(self._dup(msg))
+
+    @staticmethod
+    def _dup(msg: Message) -> Message:
+        # a fresh instance: indexes track consumption per-object, so a
+        # duplicate must not share the original's `consumed` flag
+        m = Message(msg.src, msg.dst, msg.tag, msg.payload)
+        m.vtime = msg.vtime
+        return m
+
+    # ---- delayed delivery (fault injection) --------------------------------
+    def _fault_enqueue(self, msg: Message, delay_s: float, dup: bool) -> None:
+        with self._fault_cv:
+            if self._fault_q is None:
+                self._fault_q = deque()
+                threading.Thread(target=self._fault_loop, daemon=True,
+                                 name=f"fault-delay-r{self.rank}").start()
+            self._fault_q.append((time.monotonic() + delay_s, msg, dup))
+            self._fault_cv.notify()
+
+    def _fault_loop(self) -> None:
+        while True:
+            with self._fault_cv:
+                while not self._fault_q and not self._fault_stop:
+                    self._fault_cv.wait(0.25)
+                if not self._fault_q:
+                    return  # stopped and drained
+                release, msg, dup = self._fault_q[0]
+                wait = release - time.monotonic()
+                if wait > 0 and not self._fault_stop:
+                    self._fault_cv.wait(min(wait, 0.25))
+                    continue
+                self._fault_q.popleft()
+            try:
+                self.transport.route(msg)
+                if dup:
+                    self.transport.route(self._dup(msg))
+            except (OSError, RuntimeError):
+                return  # backend torn down mid-flight; drop like a NIC
+
+    def stop_faults(self) -> None:
+        """Flush and stop the delayed-delivery worker (world teardown)."""
+        with self._fault_cv:
+            self._fault_stop = True
+            self._fault_cv.notify_all()
+
+    # ---- failure teardown ---------------------------------------------------
+    @property
+    def poisoned(self) -> Optional[str]:
+        return self._poisoned
+
+    def poison(self, reason: str) -> None:
+        """Make every blocked/future recv raise `TransportClosed` — the
+        harness calls this on surviving ranks after a peer failure so
+        they unwind promptly instead of waiting out their timeouts."""
+        with self._cv:
+            self._poisoned = reason
+            self._cv.notify_all()
+        self.stop_faults()
 
     def isend(self, dst: int, payload: bytes, tag: int = 0):
         self.send(dst, payload, tag)
@@ -363,6 +467,9 @@ class Endpoint:
             msg = self.drain_buffer.claim(src, tag)
             if msg is not None:
                 return msg  # occupancy was already paid at drain time
+            if self._poisoned is not None:
+                raise TransportClosed(
+                    f"rank {self.rank}: {self._poisoned}")
             with self._cv:
                 # claim and wait under ONE lock hold: enqueue() notifies
                 # under the same lock, so a message landing between a

@@ -1,4 +1,5 @@
-"""World harness: run one rank function per rank over any transport.
+"""World harness: run one rank function per rank over any transport —
+and SUPERVISE it through rank failures.
 
 The launcher picture, uniform across backends:
 
@@ -14,9 +15,27 @@ unchanged whether its world is threads or processes (the paper's
 network-agnosticism, reproduced at the harness level).
 
 `fn(ctx)` receives a `WorldContext` (rank, n, ep, agent, coord,
-transport) and returns a picklable result.  Socket ranks ship their
-result back to the launcher over the fabric itself on TAG_RESULT —
-the harness has no side channel the transport doesn't provide.
+transport, faults) and returns a picklable result.  Socket ranks ship
+their result back to the launcher over the fabric itself on TAG_RESULT
+— the harness has no side channel the transport doesn't provide.
+
+Failure semantics (the NERSC-production half of the paper's story):
+
+  * an injected `RankKilled` hard-exits a socket rank process (no
+    goodbye, no result — the switch sees a raw EOF and synthesizes an
+    EOF notice to the coordinator) and, for inproc, unwinds the rank
+    thread with the harness reporting the death to the server — both
+    backends land in `CoordinatorServer.notify_eof`;
+  * the server aborts the in-flight 2PC (`Coordinator.fail_rank`),
+    which withdraws parked ranks, and sets its `failure_event`;
+  * the harness tears the world down promptly (poisoning surviving
+    inproc endpoints / terminating socket processes) and raises a
+    typed `RankFailure` carrying the last COMMITTED checkpoint image
+    assembled from the snapshots ranks shipped at commit time;
+  * `run_world_supervised` catches `RankFailure` and relaunches all
+    ranks from that image — optionally on a different backend (the
+    image is transport-free JSON by construction) — bounding lost work
+    to the checkpoint interval.
 
 Process start method is ``fork`` (closures over launcher state — e.g.
 a checkpoint image — reach the children without pickling); platforms
@@ -25,16 +44,19 @@ without fork get a clear error and should run the "inproc" backend.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import pickle
 import time
 import traceback
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
-from repro.comm.transport.base import TAG_RESULT, Endpoint
+from repro.comm.transport.base import TAG_RESULT, Endpoint, TransportClosed
+from repro.comm.transport.faults import FaultPlan, RankKilled
 from repro.comm.transport.inproc import InprocTransport
 from repro.comm.transport.tcp import FabricSwitch, SocketTransport
 from repro.core.control import (CoordinatorClient, CoordinatorServer,
-                                make_control_plane)
+                                RankFailure, make_control_plane)
 
 
 @dataclasses.dataclass
@@ -45,6 +67,7 @@ class WorldContext:
     agent: Any                      # RankAgent
     coord: CoordinatorClient
     transport: Any
+    faults: Optional[FaultPlan] = None
 
 
 @dataclasses.dataclass
@@ -70,20 +93,53 @@ def _make_agent(rank: int, ep: Endpoint, coord, n: int, mode: str,
                      coll_algo=coll_algo, transport=transport_name)
 
 
+def restore_agent_from_blob(ctx: "WorldContext", agent_blob: Dict) -> None:
+    """Rebind a serialized `RankAgent` blob (the "agent" entry of a
+    checkpoint-image rank snapshot) onto THIS world's endpoint: the
+    virtual comm table is restored and re-registered with the
+    coordinator, collective counts resume, and drained messages are
+    re-appended for replay — the §III-C restore ritual, shared by every
+    restart path (chaos supervisor, benchmarks, tests, examples).
+
+    App-held comm HANDLES (world/row vids) are application upper-half
+    state and are NOT reassigned here: vids are stable across restore,
+    and membership alone cannot distinguish identically-membered comms
+    (a row as wide as the world IS the world) — reassign them from your
+    own image fields, or scan `ctx.agent.comms.active()`.
+    """
+    from repro.comm.transport.base import Message
+    from repro.core.virtual import VirtualCommTable, comm_gid
+    a, ep = ctx.agent, ctx.ep
+    a.comms = VirtualCommTable.restore(agent_blob["comms"],
+                                       real_factory=lambda ranks: ep)
+    for ranks in a.comms.active().values():
+        ctx.coord.register_comm(comm_gid(tuple(ranks)), tuple(ranks))
+    a.coll_counts.update({int(g): c
+                          for g, c in agent_blob["coll_counts"].items()})
+    for src, dst, tag, hexpayload in agent_blob["drain_buffer"]:
+        ep.drain_buffer.append(
+            Message(src, dst, tag, bytes.fromhex(hexpayload)))
+
+
 def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
               msg_cost_us: float = 0.0, unblock_window: float = 0.5,
               mode: str = "hybrid", coll_algo: Optional[str] = "tree",
-              timeout: float = 300.0,
+              timeout: float = 300.0, faults: Optional[FaultPlan] = None,
+              heartbeat_s: Optional[float] = None,
               on_running: Optional[Callable[[CoordinatorServer], None]] = None,
               ) -> WorldResult:
     """Run `fn` on every rank of a fresh `transport` world and tear the
-    world down.  Raises `WorldError` if any rank raised."""
+    world down.  Raises `RankFailure` if a rank crashes (fault
+    injection, process death, missed heartbeats) and `WorldError` if a
+    rank raises an ordinary application error."""
     if transport == "inproc":
         return _run_inproc(n, fn, msg_cost_us, unblock_window, mode,
-                           coll_algo, timeout, on_running)
+                           coll_algo, timeout, faults, heartbeat_s,
+                           on_running)
     if transport == "socket":
         return _run_socket(n, fn, msg_cost_us, unblock_window, mode,
-                           coll_algo, timeout, on_running)
+                           coll_algo, timeout, faults, heartbeat_s,
+                           on_running)
     from repro.comm.transport import available_transports
     raise ValueError(f"unknown transport {transport!r}; "
                      f"registered: {available_transports()}")
@@ -94,12 +150,13 @@ def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
 # ---------------------------------------------------------------------------
 
 def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
-                timeout, on_running) -> WorldResult:
+                timeout, faults, heartbeat_s, on_running) -> WorldResult:
     import threading
 
-    world = InprocTransport(n, msg_cost_us=msg_cost_us)
-    server, clients = make_control_plane(world,
-                                         unblock_window=unblock_window)
+    world = InprocTransport(n, msg_cost_us=msg_cost_us, fault_plan=faults)
+    server, clients = make_control_plane(
+        world, unblock_window=unblock_window,
+        heartbeat_timeout=None if heartbeat_s is None else 5 * heartbeat_s)
     results: Dict[int, Any] = {}
     errors: Dict[int, str] = {}
 
@@ -107,10 +164,30 @@ def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
         ep = world.endpoints[r]
         coord = clients[r]
         agent = _make_agent(r, ep, coord, n, mode, coll_algo, "inproc")
+        if heartbeat_s is not None:
+            coord.start_heartbeat(heartbeat_s)
         try:
-            results[r] = fn(WorldContext(r, n, ep, agent, coord, world))
+            results[r] = fn(WorldContext(r, n, ep, agent, coord, world,
+                                         faults))
+        except RankKilled as e:
+            # an inproc "crash" is a thread unwinding; the harness (the
+            # launcher, playing resource manager) reports the death —
+            # the socket backend's raw-EOF path lands in the same place
+            errors[r] = str(e)
+            server.notify_eof(r)
+        except TransportClosed as e:
+            # collateral teardown after a PEER failed — not this rank's
+            # error; recorded for the logs only
+            errors.setdefault(r, f"torn down: {e}")
         except Exception:  # noqa: BLE001 — reported via WorldError
             errors[r] = traceback.format_exc()
+        finally:
+            coord.stop_heartbeat()
+            # clean-exit goodbye, exactly like _socket_child: without
+            # it the heartbeat monitor would declare an early-finishing
+            # rank crashed once its beats go stale.  A killed rank's
+            # notify_eof already fired above, so this cannot mask it.
+            coord.bye()
 
     threads = [threading.Thread(target=work, args=(r,), daemon=True)
                for r in range(n)]
@@ -119,8 +196,28 @@ def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
     if on_running is not None:
         on_running(server)
     deadline = time.monotonic() + timeout
-    for t in threads:
-        t.join(timeout=max(0.0, deadline - time.monotonic()))
+    while any(t.is_alive() for t in threads):
+        if server.failure_event.is_set():
+            break
+        if time.monotonic() > deadline:
+            break
+        server.failure_event.wait(0.02)
+    if server.failure_event.is_set():
+        # capture the image BEFORE stopping the server, then unwind the
+        # survivors promptly (they may be blocked on the dead rank)
+        image = server.committed_image()
+        detected = time.monotonic()
+        for ep in world.endpoints:
+            ep.poison(f"rank(s) {server.failed} failed; world torn down")
+        join_by = time.monotonic() + 10.0
+        for t in threads:
+            t.join(timeout=max(0.0, join_by - time.monotonic()))
+        server.stop()
+        world.close()
+        raise RankFailure(server.failed, transport="inproc",
+                          committed_image=image,
+                          partial_results=dict(results),
+                          detected_at=detected)
     hung = [r for r, t in enumerate(threads) if t.is_alive()]
     server.stop()
     stats = dict(server.coord.stats)
@@ -137,24 +234,33 @@ def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
 # socket: one forked OS process per rank
 # ---------------------------------------------------------------------------
 
-def _socket_child(rank, n, addr, fn, msg_cost_us, mode, coll_algo):
-    tr = SocketTransport(n, rank, addr, msg_cost_us=msg_cost_us)
+def _socket_child(rank, n, addr, fn, msg_cost_us, mode, coll_algo, faults,
+                  heartbeat_s):
+    tr = SocketTransport(n, rank, addr, msg_cost_us=msg_cost_us,
+                         fault_plan=faults)
     ep = tr.endpoint
     coord = CoordinatorClient(ep)
+    if heartbeat_s is not None:
+        coord.start_heartbeat(heartbeat_s)
     envelope: Dict[str, Any]
     try:
         agent = _make_agent(rank, ep, coord, n, mode, coll_algo, "socket")
-        out = fn(WorldContext(rank, n, ep, agent, coord, tr))
+        out = fn(WorldContext(rank, n, ep, agent, coord, tr, faults))
         envelope = {"ok": out, "vclock": ep.vclock}
+    except RankKilled:
+        # a CRASH, not an error report: no result, no goodbye — the
+        # switch sees a raw EOF, exactly like a powered-off node
+        os._exit(17)
     except Exception:  # noqa: BLE001 — shipped to the launcher
         envelope = {"err": traceback.format_exc(), "vclock": ep.vclock}
     ep.send(tr.coord_rank, pickle.dumps((rank, envelope)), TAG_RESULT)
-    time.sleep(0.05)  # let the frame flush before the fd closes
+    coord.bye()       # clean exit: the upcoming EOF is a departure
+    time.sleep(0.05)  # let the frames flush before the fd closes
     tr.close()
 
 
 def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
-                timeout, on_running) -> WorldResult:
+                timeout, faults, heartbeat_s, on_running) -> WorldResult:
     import multiprocessing
 
     try:
@@ -164,13 +270,15 @@ def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
             "socket world harness needs the fork start method; "
             "use the inproc backend on this platform") from e
 
-    switch = FabricSwitch()
+    switch = FabricSwitch(coord_rank=n)
     coord_tr = SocketTransport(n, n, switch.addr)  # coordinator = rank n
-    server = CoordinatorServer(coord_tr.endpoint, n,
-                               unblock_window=unblock_window).start()
+    server = CoordinatorServer(
+        coord_tr.endpoint, n, unblock_window=unblock_window,
+        heartbeat_timeout=None if heartbeat_s is None else 5 * heartbeat_s,
+    ).start()
     procs = [ctx.Process(target=_socket_child, daemon=True,
                          args=(r, n, switch.addr, fn, msg_cost_us, mode,
-                               coll_algo))
+                               coll_algo, faults, heartbeat_s))
              for r in range(n)]
     for p in procs:
         p.start()
@@ -180,8 +288,15 @@ def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
     errors: Dict[int, str] = {}
     vclocks = [0.0] * n
     deadline = time.monotonic() + timeout
+    failure: Optional[RankFailure] = None
     try:
         while len(results) + len(errors) < n:
+            if server.failure_event.is_set():
+                failure = RankFailure(server.failed, transport="socket",
+                                      committed_image=server.committed_image(),
+                                      partial_results=dict(results),
+                                      detected_at=time.monotonic())
+                break
             remaining = deadline - time.monotonic()
             if remaining <= 0:
                 missing = sorted(set(range(n)) - set(results) - set(errors))
@@ -190,7 +305,7 @@ def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
                 break
             try:
                 msg = coord_tr.endpoint.recv(None, TAG_RESULT,
-                                             timeout=min(remaining, 5.0))
+                                             timeout=min(remaining, 0.25))
             except TimeoutError:
                 continue
             rank, envelope = pickle.loads(msg.payload)
@@ -200,8 +315,9 @@ def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
             else:
                 results[rank] = envelope["ok"]
     finally:
+        join_by = time.monotonic() + (2.0 if failure is not None else 10.0)
         for p in procs:
-            p.join(timeout=10)
+            p.join(timeout=max(0.0, join_by - time.monotonic()))
         for p in procs:
             if p.is_alive():
                 p.terminate()
@@ -209,6 +325,95 @@ def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
         stats = dict(server.coord.stats)
         coord_tr.close()
         switch.close()
+    if failure is not None:
+        raise failure
     if errors:
         raise WorldError(errors)
     return WorldResult(results, vclocks, stats, "socket")
+
+
+# ---------------------------------------------------------------------------
+# supervisor: auto-restart from the last committed image
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SupervisedRun:
+    result: WorldResult             # the successful (final) attempt
+    attempts: int                   # worlds launched (failures + 1)
+    failures: List[Dict]            # one record per failed attempt
+    final_transport: str
+    image: Optional[Dict]           # image the final attempt started from
+
+
+def run_world_supervised(
+        transports: Union[str, Sequence[str]], n: int,
+        fn_factory: Callable[[int, Optional[Dict]], Callable],
+        *, max_restarts: int = 8,
+        faults_for_attempt: Optional[Callable[[int], Optional[FaultPlan]]] = None,
+        image: Optional[Dict] = None,
+        log_dir: Optional[str] = None,
+        **run_kw) -> SupervisedRun:
+    """Supervise a world through rank failures.
+
+    `fn_factory(attempt, image)` builds the per-rank function for one
+    attempt; `image` is None on a cold start, else the last COMMITTED
+    checkpoint image (`{"epoch", "n_ranks", "ranks": {str(rank): blob}}`)
+    — forced through a JSON round trip, so a blob that smuggled live
+    transport state would fail loudly, and restarting on a DIFFERENT
+    backend (pass a sequence of transport names to cycle through) is
+    correct by construction.
+
+    On `RankFailure`: record it (to `log_dir` if given), adopt the
+    failure's committed image if it carries one, and relaunch.  Raises
+    the last `RankFailure` once `max_restarts` is exhausted.
+    """
+    names = [transports] if isinstance(transports, str) else list(transports)
+    failures: List[Dict] = []
+    if log_dir:
+        os.makedirs(log_dir, exist_ok=True)
+    user_on_running = run_kw.pop("on_running", None)
+    prev_detect = [0.0]   # monotonic time the previous failure was detected
+
+    def on_running(server):
+        # recovery latency: failure detection -> restarted world running
+        if prev_detect[0]:
+            failures[-1]["recovery_s"] = round(
+                time.monotonic() - prev_detect[0], 4)
+            prev_detect[0] = 0.0
+        if user_on_running is not None:
+            user_on_running(server)
+
+    last_failure: Optional[RankFailure] = None
+    for attempt in range(max_restarts + 1):
+        transport = names[attempt % len(names)]
+        faults = faults_for_attempt(attempt) if faults_for_attempt else None
+        fn = fn_factory(attempt, image)
+        try:
+            res = run_world(transport, n, fn, faults=faults,
+                            on_running=on_running, **run_kw)
+            return SupervisedRun(res, attempt + 1, failures, transport,
+                                 image)
+        except RankFailure as rf:
+            last_failure = rf
+            prev_detect[0] = rf.detected_at
+            record = {"attempt": attempt, "transport": transport,
+                      "failed_ranks": rf.ranks,
+                      "image_epoch": None if rf.committed_image is None
+                      else rf.committed_image["epoch"]}
+            if rf.committed_image is not None:
+                # transport-free by construction: JSON round trip
+                image = json.loads(json.dumps(rf.committed_image))
+            failures.append(record)
+            if log_dir:
+                with open(os.path.join(log_dir,
+                                       f"attempt_{attempt:03d}.json"),
+                          "w") as f:
+                    json.dump({**record,
+                               "partial_result_ranks":
+                                   sorted(rf.partial_results)}, f, indent=1)
+                if image is not None:
+                    with open(os.path.join(log_dir, "last_image.json"),
+                              "w") as f:
+                        json.dump(image, f)
+    assert last_failure is not None
+    raise last_failure

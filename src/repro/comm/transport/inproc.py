@@ -23,8 +23,9 @@ class InprocTransport(Transport):
 
     name = "inproc"
 
-    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0):
-        super().__init__(n_ranks, msg_cost_us)
+    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0,
+                 fault_plan=None):
+        super().__init__(n_ranks, msg_cost_us, fault_plan=fault_plan)
         self.endpoints: List[Endpoint] = [Endpoint(self, r)
                                           for r in range(n_ranks)]
         self._coord_ep = None
@@ -48,6 +49,10 @@ class InprocTransport(Transport):
 
     # back-compat: pre-transport code called fabric.deliver(msg)
     deliver = route
+
+    def close(self) -> None:
+        for ep in self.endpoints:
+            ep.stop_faults()
 
     @property
     def _stores(self):

@@ -42,10 +42,11 @@ import pickle
 import socket
 import struct
 import threading
+import time
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
-from repro.comm.transport.base import Endpoint, Message, Transport
+from repro.comm.transport.base import TAG_CTRL, Endpoint, Message, Transport
 
 _LEN = struct.Struct(">I")
 _DST = struct.Struct(">I")
@@ -93,9 +94,20 @@ class FabricSwitch:
     rank that has not joined yet are queued and flushed at its HELLO —
     so ranks may start (and send) in any order, which is the rendezvous
     half of the world bootstrap.
+
+    FAILURE DETECTION: with `coord_rank` set, a rank connection closing
+    makes the switch synthesize an `{"op": "eof"}` control frame from
+    that rank to the coordinator endpoint.  Because the frame is
+    forwarded on the coordinator's connection AFTER everything the rank
+    sent while alive, the coordinator is guaranteed to observe a clean
+    rank's goodbye (`{"op": "bye"}`) before its EOF — so a raw EOF
+    without a goodbye is a crash, exactly like TCP FIN vs RST.  The
+    coordinator's own connection never generates a notice.
     """
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 coord_rank: Optional[int] = None):
+        self.coord_rank = coord_rank
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._listener.bind((host, port))
@@ -125,7 +137,10 @@ class FabricSwitch:
             self._threads.append(t)
 
     def _serve_conn(self, conn: socket.socket) -> None:
-        hello = _recv_frame(conn)
+        try:
+            hello = _recv_frame(conn)
+        except OSError:
+            hello = None
         if hello is None:
             conn.close()
             return
@@ -152,9 +167,12 @@ class FabricSwitch:
         finally:
             wlock.release()
         while True:
-            blob = _recv_frame(conn)
+            try:
+                blob = _recv_frame(conn)
+            except OSError:
+                blob = None  # connection reset: a crash is an EOF too
             if blob is None:
-                break  # rank exited
+                break  # rank exited (cleanly or not)
             # dst rides in a fixed-offset header: route without
             # unpickling the payload
             self._forward(_DST.unpack_from(blob)[0], blob)
@@ -167,6 +185,13 @@ class FabricSwitch:
             self._departed.add(rank)
             self._pending.pop(rank, None)
         conn.close()
+        if (self.coord_rank is not None and rank != self.coord_rank
+                and not self._closed):
+            # EOF notice to the coordinator (see class docstring);
+            # ordered after every frame the rank sent while alive
+            self._forward(self.coord_rank, _encode(Message(
+                rank, self.coord_rank, TAG_CTRL,
+                pickle.dumps({"op": "eof", "rank": rank}))))
 
     def _forward(self, dst: int, blob: bytes) -> None:
         with self._lock:
@@ -211,10 +236,16 @@ class SocketTransport(Transport):
     name = "socket"
 
     def __init__(self, n_ranks: int, rank: int, addr: Tuple[str, int],
-                 msg_cost_us: float = 0.0):
-        super().__init__(n_ranks, msg_cost_us)
+                 msg_cost_us: float = 0.0, fault_plan=None):
+        super().__init__(n_ranks, msg_cost_us, fault_plan=fault_plan)
         self.rank = rank
         self.endpoint = Endpoint(self, rank)
+        if fault_plan is not None:
+            # slow-joiner injection: HELLO (and the connect itself) is
+            # late, so peers' frames queue at the switch pre-join
+            hd = fault_plan.hello_delay(rank)
+            if hd:
+                time.sleep(hd)
         self._sock = socket.create_connection(addr, timeout=30)
         self._sock.settimeout(None)
         self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -248,6 +279,7 @@ class SocketTransport(Transport):
         if self._closed:
             return
         self._closed = True
+        self.endpoint.stop_faults()
         try:
             self._sock.shutdown(socket.SHUT_RDWR)
         except OSError:
@@ -268,11 +300,12 @@ class LoopbackSocketWorld(Transport):
 
     name = "socket"
 
-    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0):
-        super().__init__(n_ranks, msg_cost_us)
-        self.switch = FabricSwitch()
+    def __init__(self, n_ranks: int, msg_cost_us: float = 0.0,
+                 fault_plan=None):
+        super().__init__(n_ranks, msg_cost_us, fault_plan=fault_plan)
+        self.switch = FabricSwitch(coord_rank=n_ranks)
         self._clients = [SocketTransport(n_ranks, r, self.switch.addr,
-                                         msg_cost_us)
+                                         msg_cost_us, fault_plan=fault_plan)
                          for r in range(n_ranks)]
         self.endpoints = [t.endpoint for t in self._clients]
         self._coord_client: Optional[SocketTransport] = None

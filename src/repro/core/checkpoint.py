@@ -76,6 +76,20 @@ class CheckpointManager:
         self.full_every = max(1, full_every)
         self._since_full = 0
         os.makedirs(directory, exist_ok=True)
+        # crash recovery for the re-checkpoint retire dance (_write): a
+        # kill between retiring the old image and committing the new
+        # one leaves the only valid image under retired.* — put it back;
+        # a retired dir whose step also has a committed image is trash
+        for name in os.listdir(directory):
+            if not name.startswith("retired.ckpt_"):
+                continue
+            retired = os.path.join(directory, name)
+            d = os.path.join(directory, name[len("retired."):])
+            if os.path.exists(os.path.join(d, MANIFEST)):
+                shutil.rmtree(retired, ignore_errors=True)
+            else:
+                shutil.rmtree(d, ignore_errors=True)  # partial commit
+                os.replace(retired, d)
         self._writer = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="ckpt-writer")
         self._pending: Optional[Future] = None
@@ -194,7 +208,21 @@ class CheckpointManager:
         }
         with open(os.path.join(tmp, MANIFEST), "w") as f:
             json.dump(manifest, f)
-        os.replace(tmp, d)  # atomic commit
+        if os.path.exists(d):
+            # re-checkpointing a step (e.g. a restarted run reaching
+            # the same boundary): os.replace cannot overwrite a
+            # non-empty directory, and deleting the old image BEFORE
+            # the rename would leave a crash window with no committed
+            # checkpoint at this step — retire it aside first.  The
+            # "retired." prefix keeps it invisible to steps()/restore.
+            retired = os.path.join(self.dir,
+                                   "retired." + os.path.basename(d))
+            shutil.rmtree(retired, ignore_errors=True)
+            os.replace(d, retired)
+            os.replace(tmp, d)  # atomic commit
+            shutil.rmtree(retired, ignore_errors=True)
+        else:
+            os.replace(tmp, d)  # atomic commit
         wrote_delta = any("base_step" in e for e in arrays.values())
         self._since_full = self._since_full + 1 if wrote_delta else 0
         stats = {"step": step, "bytes": total,

@@ -29,19 +29,34 @@ Wire protocol (pickled dicts):
   coord -> rank on TAG_CTRL:   one reply per BLOCKING op ({"error":
       "aborted", ...} re-raises `CheckpointAborted` client-side);
       fire-and-forget ops (register_comm, enter, exit, committed,
-      mark_dead) get no reply — per-(src, tag) FIFO order guarantees
-      the server observes them before any later blocking op from the
-      same rank.
+      mark_dead, hb, bye, snap) get no reply — per-(src, tag) FIFO
+      order guarantees the server observes them before any later
+      blocking op from the same rank.
   coord -> rank on TAG_INTENT: {"epoch": e} pushes.  The client caches
       the newest epoch and `intent_epoch` drains pending pushes with a
       nonblocking claim — the wire analogue of the §III-I lock-free
       intent flag (a single store lookup on the hot path, no round
       trip).
+
+Failure detection and recovery (ISSUE 3; see README "Fault model"):
+  * "hb"   — liveness heartbeat; with a heartbeat timeout configured,
+      a rank that goes silent is declared failed (hung-but-connected).
+  * "bye"  — clean-exit goodbye.  The socket switch synthesizes an
+      "eof" op when a rank's connection closes, ordered AFTER the
+      rank's final traffic: EOF-without-bye is a crash (FIN vs RST).
+  * "snap" — a rank's checkpoint snapshot, shipped at commit time to
+      the LAUNCHER-side image collector (a crashed rank's memory is
+      gone); an epoch with all snapshots and a completed commit round
+      is the committed image `run_world_supervised` restarts from.
+  Either detection path calls `Coordinator.fail_rank`: abort every
+  in-flight epoch, withdraw parked ranks, wake `failure_event` so the
+  harness raises a typed `RankFailure` instead of hanging.
 """
 from __future__ import annotations
 
 import pickle
 import threading
+import time
 import traceback
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -57,6 +72,28 @@ _BLOCKING_OPS = ("park", "wait_all_committed", "wait_released",
 _REPLY_SLACK_S = 15.0
 
 
+class RankFailure(RuntimeError):
+    """One or more ranks crashed (endpoint EOF without a goodbye,
+    missed heartbeats, or an injected kill).  Raised by the world
+    harness instead of hanging; carries everything the supervisor
+    needs to relaunch from the last committed checkpoint image."""
+
+    def __init__(self, ranks, transport: Optional[str] = None,
+                 committed_image: Optional[Dict] = None,
+                 partial_results: Optional[Dict] = None,
+                 detected_at: float = 0.0):
+        ranks = sorted(set(ranks))
+        super().__init__(
+            f"rank(s) {ranks} failed on transport {transport!r}"
+            + ("" if committed_image is None else
+               f"; last committed image: epoch {committed_image['epoch']}"))
+        self.ranks = ranks
+        self.transport = transport
+        self.committed_image = committed_image   # {"epoch", "n_ranks", "ranks"}
+        self.partial_results = partial_results or {}
+        self.detected_at = detected_at           # time.monotonic() at detection
+
+
 class CoordinatorServer:
     """Serves the checkpoint control plane over an endpoint.
 
@@ -66,17 +103,40 @@ class CoordinatorServer:
     """
 
     def __init__(self, endpoint: Endpoint, n_ranks: int,
-                 unblock_window: float = 0.25):
+                 unblock_window: float = 0.25,
+                 heartbeat_timeout: Optional[float] = None):
         self.ep = endpoint
         self.n_ranks = n_ranks
         self.coord = Coordinator(n_ranks, unblock_window=unblock_window)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._serve, daemon=True,
                                         name="coordinator-server")
+        # ---- failure detection ------------------------------------------
+        # ranks that said goodbye (clean exit): their EOF is not a crash
+        self._byed: set = set()
+        self.failed: "list[int]" = []
+        self.failure_event = threading.Event()
+        # last-heartbeat times; monitored only when heartbeat_timeout set
+        self._hb: Dict[int, float] = {}
+        self._hb_timeout = heartbeat_timeout
+        self._hb_thread: Optional[threading.Thread] = None
+        # ---- checkpoint image collection --------------------------------
+        # epoch -> {rank: blob}; an epoch with all n_ranks snapshots AND
+        # coordinator-confirmed completion is a COMMITTED image the
+        # supervisor can restart from (rank snapshots must live on the
+        # launcher side: in a multi-process world a crashed rank's
+        # memory is gone)
+        self._snaps: Dict[int, Dict[int, Dict]] = {}
+        self._snap_lock = threading.Lock()
 
     # ---- lifecycle ---------------------------------------------------------
     def start(self) -> "CoordinatorServer":
         self._thread.start()
+        if self._hb_timeout is not None:
+            self._hb_thread = threading.Thread(
+                target=self._hb_monitor, daemon=True,
+                name="coordinator-hb-monitor")
+            self._hb_thread.start()
         return self
 
     def stop(self, timeout: float = 5.0) -> None:
@@ -101,6 +161,59 @@ class CoordinatorServer:
     @property
     def stats(self) -> Dict:
         return self.coord.stats
+
+    # ---- failure detection --------------------------------------------------
+    def notify_eof(self, rank: int) -> None:
+        """A rank's endpoint reached EOF.  Clean exits said goodbye
+        first (conn FIFO guarantees the goodbye is observed before the
+        EOF notice); a goodbye-less EOF is a crash: mark the rank
+        failed, abort the in-flight 2PC and wake the harness."""
+        if rank in self._byed:
+            return
+        if self.coord.fail_rank(rank):
+            self.failed.append(rank)
+            self.failure_event.set()
+
+    def _hb_monitor(self) -> None:
+        """Missed-heartbeat detection: a rank that has heartbeated at
+        least once and then goes silent longer than the timeout is
+        declared failed (covers hung-but-connected ranks that never
+        produce an EOF)."""
+        interval = max(0.01, self._hb_timeout / 4)
+        while not self._stop.wait(interval):
+            now = time.monotonic()
+            for rank, last in list(self._hb.items()):
+                if (now - last > self._hb_timeout
+                        and rank not in self._byed):
+                    self.notify_eof(rank)
+
+    # ---- checkpoint image collection ---------------------------------------
+    def _prune_snaps(self) -> None:
+        """Drop snapshot sets superseded by a newer committed image —
+        only the newest restartable epoch is ever restarted from, and
+        a long-running job checkpointing every few steps must not
+        accumulate per-epoch rank snapshots in launcher memory
+        forever.  Caller holds `_snap_lock`."""
+        done = self.coord.done_epoch
+        committed = [e for e, s in self._snaps.items()
+                     if e <= done and len(s) == self.n_ranks]
+        if committed:
+            newest = max(committed)
+            for e in [e for e in self._snaps if e < newest]:
+                del self._snaps[e]
+
+    def committed_image(self) -> Optional[Dict]:
+        """Newest checkpoint image that is restartable: every rank's
+        snapshot arrived AND the coordinator completed the epoch's
+        commit round.  None if no epoch qualifies (yet)."""
+        done = self.coord.done_epoch
+        with self._snap_lock:
+            for epoch in sorted(self._snaps, reverse=True):
+                snaps = self._snaps[epoch]
+                if epoch <= done and len(snaps) == self.n_ranks:
+                    return {"epoch": epoch, "n_ranks": self.n_ranks,
+                            "ranks": dict(snaps)}
+        return None
 
     # ---- serve loop --------------------------------------------------------
     def _serve(self) -> None:
@@ -151,6 +264,21 @@ class CoordinatorServer:
                 c.report_committed(req["rank"])
             elif op == "mark_dead":
                 c.mark_dead(req["rank"])
+            elif op == "hb":
+                self._hb[req["rank"]] = time.monotonic()
+                c.last_seen[req["rank"]] = time.monotonic()
+            elif op == "bye":
+                self._byed.add(req["rank"])
+            elif op == "eof":
+                # synthesized by the transport (the socket switch) when
+                # a rank's connection closes; conn FIFO ordered it after
+                # everything the rank sent while alive
+                self.notify_eof(req["rank"])
+            elif op == "snap":
+                with self._snap_lock:
+                    self._snaps.setdefault(req["epoch"], {})[req["rank"]] \
+                        = req["blob"]
+                    self._prune_snaps()
             elif op == "request_ckpt":
                 epoch = c.request_checkpoint()
                 self._push_intent(epoch)
@@ -272,6 +400,40 @@ class CoordinatorClient:
     def mark_dead(self, rank: int) -> None:
         self._send({"op": "mark_dead", "rank": rank})
 
+    # ---- failure / recovery plumbing ---------------------------------------
+    def ship_snapshot(self, epoch: int, blob: Dict) -> None:
+        """Ship this rank's checkpoint snapshot to the launcher-side
+        image collector (fire-and-forget, ordered before the rank's
+        `committed` report by per-(src, tag) FIFO).  `blob` must be
+        JSON-serializable: the supervisor materializes the assembled
+        image as transport-free JSON before restarting from it."""
+        self._send({"op": "snap", "rank": self.ep.rank, "epoch": epoch,
+                    "blob": blob})
+
+    def bye(self) -> None:
+        """Clean-exit goodbye: tells the server this endpoint's
+        upcoming EOF is a departure, not a crash."""
+        self._send({"op": "bye", "rank": self.ep.rank})
+
+    def start_heartbeat(self, interval: float) -> None:
+        """Start the liveness heartbeat (daemon thread; stops at
+        `stop_heartbeat` or when the endpoint goes away)."""
+        self._hb_stop = threading.Event()
+
+        def beat():
+            while not self._hb_stop.wait(interval):
+                try:
+                    self._send({"op": "hb", "rank": self.ep.rank})
+                except Exception:  # noqa: BLE001 — endpoint torn down
+                    return
+
+        threading.Thread(target=beat, daemon=True,
+                         name=f"hb-r{self.ep.rank}").start()
+
+    def stop_heartbeat(self) -> None:
+        if getattr(self, "_hb_stop", None) is not None:
+            self._hb_stop.set()
+
     def straggler_report(self, threshold: float = 0.5,
                          timeout: float = 30.0) -> Dict:
         return self._call({"op": "straggler_report",
@@ -279,10 +441,12 @@ class CoordinatorClient:
 
 
 def make_control_plane(world, unblock_window: float = 0.25,
+                       heartbeat_timeout: Optional[float] = None,
                        ) -> Tuple[CoordinatorServer, "list[CoordinatorClient]"]:
     """Wire a coordinator server onto a transport world's reserved
     endpoint and hand every local rank endpoint a client stub."""
     server = CoordinatorServer(world.coord_endpoint(), world.n_ranks,
-                               unblock_window=unblock_window).start()
+                               unblock_window=unblock_window,
+                               heartbeat_timeout=heartbeat_timeout).start()
     clients = [CoordinatorClient(ep) for ep in world.endpoints]
     return server, clients

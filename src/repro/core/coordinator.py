@@ -89,8 +89,10 @@ class Coordinator:
         self.parked_epoch: Dict[int, int] = {}
         self.park_verdict: Dict[int, str] = {}
         self._commit_count = 0
+        self.failed_ranks: List[int] = []
         self.stats = {"checkpoints": 0, "aborts": 0, "control_messages": 0,
-                      "continues_issued": 0, "watchdog_withdrawals": 0}
+                      "continues_issued": 0, "watchdog_withdrawals": 0,
+                      "rank_failures": 0}
 
     # ---- control plane -------------------------------------------------------
     def request_checkpoint(self) -> int:
@@ -144,11 +146,37 @@ class Coordinator:
             # all-parked predicate is false — no wakeup needed
 
     def mark_dead(self, rank: int) -> None:
+        """VOLUNTARY departure (a rank leaving the job): death is a
+        phase-1 closure event — the checkpoint proceeds with the
+        survivors (§III-J)."""
         with self._cv:
             self.rank_state[rank] = self.DEAD
             if self.intent_epoch > self.done_epoch:
                 self._try_close(self.intent_epoch)
             self._cv.notify_all()
+
+    def fail_rank(self, rank: int) -> bool:
+        """A rank CRASHED (endpoint EOF without a goodbye, or missed
+        heartbeats).  Unlike `mark_dead`, a crash invalidates every
+        in-flight checkpoint epoch: the dead rank's in-network bytes
+        can never be drained and its snapshot can never be shipped, so
+        no cut that includes it can commit.  Every epoch newer than the
+        last completed one is aborted, which withdraws all parked ranks
+        ("abort" verdict) and unblocks phase-2 waiters — the supervisor
+        then tears the world down and restarts from the last COMMITTED
+        image.  Returns False if the rank was already dead."""
+        with self._cv:
+            if self.rank_state.get(rank) == self.DEAD:
+                return False
+            self.rank_state[rank] = self.DEAD
+            self.failed_ranks.append(rank)
+            self.stats["rank_failures"] += 1
+            for e in range(self.done_epoch + 1, self.intent_epoch + 1):
+                if e not in self.aborted_epochs:
+                    self.aborted_epochs.add(e)
+                    self.stats["aborts"] += 1
+            self._cv.notify_all()
+            return True
 
     def _live(self) -> List[int]:
         return [r for r, s in self.rank_state.items() if s != self.DEAD]
@@ -280,7 +308,17 @@ class Coordinator:
     def wait_all_committed(self, epoch: int, timeout: float = 120.0) -> None:
         deadline = time.monotonic() + timeout
         with self._cv:
-            while self._commit_count < len(self._live()):
+            while True:
+                if epoch in self.aborted_epochs:
+                    # a rank crashed mid-commit (fail_rank): the cut is
+                    # invalid even when the SHRUNKEN live set satisfies
+                    # the count — checked before the count, or a crash
+                    # of the one unreported rank would falsely commit
+                    raise CheckpointAborted(
+                        f"epoch {epoch} aborted by rank failure "
+                        f"{self.failed_ranks}")
+                if self._commit_count >= len(self._live()):
+                    break
                 if time.monotonic() > deadline:
                     self.aborted_epochs.add(epoch)
                     self.stats["aborts"] += 1

@@ -67,6 +67,11 @@ def drain_rank(ep: Endpoint, ranks: Sequence[int], gid: int = 0,
                     if req.src == s and req.try_complete():
                         progressed = True
         if not progressed:
+            if getattr(ep, "poisoned", None):
+                # world torn down under us (a peer failed): unwind now
+                # instead of spinning out the drain deadline
+                from repro.comm.transport.base import TransportClosed
+                raise TransportClosed(f"rank {ep.rank}: {ep.poisoned}")
             if time.monotonic() > deadline:
                 raise DrainError(
                     f"rank {ep.rank}: undrainable deficit "

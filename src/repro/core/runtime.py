@@ -43,12 +43,16 @@ class MANARuntime:
                  keep: int = 3, quantize_moments: bool = False,
                  delta_params: bool = False, seed: int = 0,
                  install_signal_handler: bool = False,
-                 transport: str = "inproc"):
+                 transport: str = "inproc", fault_plan=None):
         self.cfg, self.rc = cfg, rc
         self.seed = seed
         # lower half: rebuilt at restart — including the comm world, so
-        # a checkpoint taken over one transport restores over another
-        self.lower = LowerHalf.build(cfg, rc, mesh, transport=transport)
+        # a checkpoint taken over one transport restores over another.
+        # fault_plan installs deterministic chaos on that world (used
+        # by the chaos suite to prove the runtime's checkpoint cycle is
+        # delay-tolerant).
+        self.lower = LowerHalf.build(cfg, rc, mesh, transport=transport,
+                                     fault_plan=fault_plan)
         _, self.logical = abstract_params(cfg)
         self.dataset = SyntheticDataset(cfg, rc.shape, seed=seed)
         self.ckpt = CheckpointManager(

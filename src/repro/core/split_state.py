@@ -52,11 +52,15 @@ class LowerHalf:
 
     @classmethod
     def build(cls, cfg: ModelConfig, rc: RunConfig, mesh=None,
-              transport: str = "inproc", n_ranks: int = 1) -> "LowerHalf":
+              transport: str = "inproc", n_ranks: int = 1,
+              fault_plan=None) -> "LowerHalf":
         from repro.comm.transport import create_world
         from repro.training.step import make_train_step, train_state_specs
 
-        comm = create_world(transport, n_ranks)
+        # fault_plan: deterministic chaos injection on the rebuilt
+        # lower half's fabric (repro.comm.transport.faults) — physical
+        # state like the rest of the comm world, never checkpointed
+        comm = create_world(transport, n_ranks, fault_plan=fault_plan)
         if mesh is None:
             return cls(None, None, jax.jit(make_train_step(cfg, rc, None)),
                        None, comm, transport)

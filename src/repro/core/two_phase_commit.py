@@ -60,6 +60,7 @@ class RankAgent:
         # — must agree across all ranks of a job
         self.coll_algo = coll_algo
         self.done_epoch = 0
+        self.ckpt_epoch = 0  # adopted epoch of the snapshot in progress
         # upper-half tables (serialized into every checkpoint)
         self.comms = VirtualCommTable()
         self.requests = VirtualRequestTable()
@@ -194,6 +195,10 @@ class RankAgent:
         drain_rank(self.ep, world, gid=comm_gid(world), timeout=timeout,
                    algo=self.coll_algo)
         ok = False
+        # the adopted epoch this snapshot belongs to — snapshot
+        # callbacks that ship their blob to the launcher-side image
+        # collector (CoordinatorClient.ship_snapshot) read it here
+        self.ckpt_epoch = epoch
         try:
             snapshot()
             self.coord.report_committed(self.rank)

@@ -1,0 +1,514 @@
+"""Chaos suite: fault injection, failure detection and supervised
+recovery (ISSUE 3 tentpole), plus the transport conformance contract
+re-run under seeded random message delays.
+
+Seeds come from MANA_CHAOS_SEEDS (comma-separated; CI fans a matrix
+over it).  Every fault decision is a pure function of
+(seed, rule, sender, send-index) — `test_fault_schedule_is_deterministic`
+pins that — so a failing parameterized test reproduces from the seed in
+its test id alone, on either backend:
+
+    MANA_CHAOS_SEEDS=<seed> pytest tests/test_chaos.py -k "<seed> and <backend>"
+"""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.comm import collectives as coll
+from repro.comm.transport import (FaultPlan, RankKilled, TransportClosed,
+                                  available_transports, create_world)
+from repro.comm.transport.harness import (RankFailure, run_world,
+                                          run_world_supervised)
+from repro.comm.transport.tcp import FabricSwitch, SocketTransport
+from repro.core.control import make_control_plane
+from repro.core.coordinator import Coordinator
+from repro.core.drain import drain_rank
+from repro.core.virtual import comm_gid
+
+TRANSPORTS = available_transports()
+CHAOS_SEEDS = [int(s) for s in
+               os.environ.get("MANA_CHAOS_SEEDS", "7,23").split(",")]
+
+
+def _delay_plan(seed):
+    """The chaos-conformance plan: ~35% of app/collective messages get
+    a seeded delay.  Control traffic is exempt by design."""
+    return FaultPlan(seed).delay(prob=0.35, max_delay_s=0.004)
+
+
+@pytest.fixture(params=TRANSPORTS)
+def transport(request):
+    return request.param
+
+
+@pytest.fixture(params=CHAOS_SEEDS, ids=lambda s: f"seed{s}")
+def chaos_seed(request):
+    return request.param
+
+
+@pytest.fixture
+def world(transport, chaos_seed):
+    worlds = []
+
+    def make(n, msg_cost_us=0.0):
+        w = create_world(transport, n, msg_cost_us=msg_cost_us,
+                         fault_plan=_delay_plan(chaos_seed))
+        worlds.append(w)
+        return w
+
+    yield make
+    for w in worlds:
+        w.close()
+
+
+def _wait(pred, timeout=10.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"{what} not observed within {timeout}s")
+        time.sleep(0.0005)
+
+
+# ---------------------------------------------------------------------------
+# the injector itself: deterministic, wire-level, backend-agnostic
+# ---------------------------------------------------------------------------
+
+def test_fault_schedule_is_deterministic():
+    mk = lambda: (FaultPlan(42).delay(prob=0.3, max_delay_s=0.01)  # noqa: E731
+                  .drop(src=1, prob=0.2).duplicate(dst=2, prob=0.1))
+    p1, p2 = mk(), mk()
+    seq1 = [(p1.decide(s, d, 0, i).action, p1.decide(s, d, 0, i).delay_s)
+            for s in range(3) for d in range(3) for i in range(40)]
+    seq2 = [(p2.decide(s, d, 0, i).action, p2.decide(s, d, 0, i).delay_s)
+            for s in range(3) for d in range(3) for i in range(40)]
+    assert seq1 == seq2
+    # a different seed produces a different schedule
+    p3 = FaultPlan(43).delay(prob=0.3, max_delay_s=0.01) \
+        .drop(src=1, prob=0.2).duplicate(dst=2, prob=0.1)
+    seq3 = [(p3.decide(s, d, 0, i).action, p3.decide(s, d, 0, i).delay_s)
+            for s in range(3) for d in range(3) for i in range(40)]
+    assert seq1 != seq3
+
+
+def test_drop_dup_kill_semantics(transport):
+    plan = (FaultPlan(1).drop(src=0, dst=1, tag=5)
+            .duplicate(src=0, dst=1, tag=6).kill(0, after_sends=4))
+    w = create_world(transport, 2, fault_plan=plan)
+    try:
+        e0, e1 = w.endpoints
+        e0.send(1, b"lost", tag=5)      # dropped after accounting
+        e0.send(1, b"twice", tag=6)     # duplicated (no dedup: visible)
+        e0.send(1, b"plain", tag=7)
+        assert e1.recv(0, 6, timeout=10).payload == b"twice"
+        assert e1.recv(0, 6, timeout=10).payload == b"twice"
+        assert e1.recv(0, 7, timeout=10).payload == b"plain"
+        assert not e1.iprobe(0, 5)      # the drop is a real loss
+        assert e0.sent_bytes[1] == len(b"lost" + b"twice" + b"plain")
+        with pytest.raises(RankKilled):
+            e0.send(1, b"never", tag=0)  # the 4th app send kills rank 0
+    finally:
+        w.close()
+
+
+def test_killed_send_leaves_counters_clean(transport):
+    w = create_world(transport, 2,
+                     fault_plan=FaultPlan(0).kill(0, after_sends=1))
+    try:
+        with pytest.raises(RankKilled):
+            w.endpoints[0].send(1, b"x" * 64)
+        assert w.endpoints[0].sent_bytes[1] == 0  # never left the NIC
+    finally:
+        w.close()
+
+
+def test_on_step_kill_and_pending_gate():
+    plan = FaultPlan(0).kill(3, at_step=5).kill(4, at_step=2,
+                                                when_pending=True)
+    plan.on_step(3, 4)
+    with pytest.raises(RankKilled):
+        plan.on_step(3, 5)
+    plan.on_step(4, 7, ckpt_pending=False)  # gated: no checkpoint pending
+    with pytest.raises(RankKilled) as ei:
+        plan.on_step(4, 7, ckpt_pending=True)
+    assert "mid-phase-1" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# conformance contract under seeded delays (both backends) — the fabric
+# guarantees must be DELAY-INVARIANT; any failing seed reproduces alone
+# ---------------------------------------------------------------------------
+
+def test_chaos_fifo_order_per_src_tag(world):
+    w = world(2)
+    e0, e1 = w.endpoints
+    for i in range(24):
+        e0.send(1, f"m{i}".encode(), tag=i % 3)
+    for t in range(3):
+        got = [e1.recv(0, t, timeout=10).payload for _ in range(8)]
+        assert got == [f"m{i}".encode() for i in range(24) if i % 3 == t]
+
+
+def test_chaos_wildcard_order(world):
+    w = world(2)
+    e0, e1 = w.endpoints
+    for i in range(16):
+        e0.send(1, f"w{i}".encode(), tag=5 + i % 2)
+    got = [e1.recv(0, timeout=10).payload for _ in range(16)]
+    assert got == [f"w{i}".encode() for i in range(16)]
+
+
+def test_chaos_drain_closure(world):
+    n = 4
+    w = world(n)
+    eps = w.endpoints
+    for r in range(n):
+        eps[r].send((r + 1) % n, bytes(10 + r))
+        eps[r].send((r + 2) % n, bytes(5 + r))
+    world_ranks = list(range(n))
+    gid = comm_gid(tuple(world_ranks))
+    results = {}
+
+    def run(r):
+        results[r] = drain_rank(eps[r], world_ranks, gid=gid, timeout=30)
+
+    threads = [threading.Thread(target=run, args=(r,), daemon=True)
+               for r in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert len(results) == n
+    for r in range(n):
+        for s in range(n):
+            if r != s:
+                assert eps[r].recvd_bytes[s] == eps[s].sent_bytes[r], (r, s)
+            assert eps[r].queued_bytes_from(s) == 0
+
+
+def test_chaos_virtual_time_is_delay_invariant(world, transport):
+    """Injected delays are wall-clock only: the virtual-time occupancy
+    model must produce the exact same latencies as a fault-free world."""
+    n = 5
+    w = world(n, msg_cost_us=100.0)
+    ref = create_world("inproc", n, msg_cost_us=100.0)  # no faults
+    try:
+        for eps in (w.endpoints, ref.endpoints):
+            out = {}
+
+            def work(r, eps=eps, out=out):
+                out[r] = coll.allreduce(eps[r], list(range(n)), r,
+                                        lambda a, b: a + b, gid=1)
+
+            threads = [threading.Thread(target=work, args=(r,), daemon=True)
+                       for r in range(n)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30)
+            assert all(out[r] == n * (n - 1) // 2 for r in range(n))
+        assert (max(ep.vclock for ep in w.endpoints)
+                == pytest.approx(max(ep.vclock for ep in ref.endpoints)))
+    finally:
+        ref.close()
+
+
+def _ckpt_job(ctx):
+    snaps = {}
+
+    def snapshot():
+        snaps["agent"] = ctx.agent.serialize()
+        snaps["step"] = step
+
+    for step in range(10):
+        if ctx.rank == 0 and step == 4:
+            ctx.coord.request_checkpoint()
+        ctx.agent.send((ctx.rank + 1) % ctx.n, b"x" * 8)
+        ctx.agent.recv((ctx.rank - 1) % ctx.n, timeout=60)
+        ctx.agent.allreduce(ctx.agent.world_comm, 1, lambda a, b: a + b)
+        ctx.agent.safe_point(snapshot)
+    ctx.agent.barrier_op(ctx.agent.world_comm)
+    while ctx.agent._ckpt_pending():
+        ctx.agent.safe_point(snapshot)
+        time.sleep(0.002)
+    return snaps
+
+
+def test_chaos_coordinator_round_trip(transport, chaos_seed):
+    """The full hybrid-2PC checkpoint (intent, park, counts, drain,
+    commit, release) completes under seeded app-message delays on
+    every backend."""
+    res = run_world(transport, 4, _ckpt_job, timeout=120,
+                    faults=_delay_plan(chaos_seed))
+    assert res.coord_stats["checkpoints"] == 1, res.coord_stats
+    assert res.coord_stats["aborts"] == 0
+    for r, snap in res.results.items():
+        assert snap["agent"]["rank"] == r and snap["step"] >= 4
+
+
+# ---------------------------------------------------------------------------
+# failure detection and supervised recovery
+# ---------------------------------------------------------------------------
+
+def _recovery_job(ctx):
+    """Pipelined ring job (receives lag sends by 2, so messages are
+    ALWAYS in flight at a checkpoint cut) that checkpoints at step 2
+    and ships snapshots to the launcher-side image collector."""
+    a = ctx.agent
+    recvd = [0]
+
+    def snapshot():
+        ctx.coord.ship_snapshot(a.ckpt_epoch, {
+            "step": step, "recvd": recvd[0], "agent": a.serialize()})
+
+    for step in range(10):
+        if ctx.rank == 0 and step == 2:
+            ctx.coord.request_checkpoint()
+        a.send((ctx.rank + 1) % ctx.n, step.to_bytes(4, "big"))
+        if step >= 2:
+            m = a.recv((ctx.rank - 1) % ctx.n, timeout=60)
+            assert int.from_bytes(m.payload, "big") == recvd[0]
+            recvd[0] += 1
+        # the fault hook observes `pending` strictly before any park
+        # under it (see make_chaos_worker in the example)
+        pending = a._ckpt_pending()
+        if ctx.faults is not None:
+            ctx.faults.on_step(ctx.rank, step, ckpt_pending=pending)
+        if pending:
+            a.safe_point(snapshot)
+        if step == 4:
+            # settle the step-2 epoch before proceeding (waiting for
+            # the intent to ARRIVE, not just servicing it if it has),
+            # so a kill at step >= 5 is deterministically ordered
+            # after the commit
+            while a.done_epoch < 1:
+                if a._ckpt_pending():
+                    if ctx.faults is not None:
+                        ctx.faults.on_step(ctx.rank, step,
+                                           ckpt_pending=True)
+                    a.safe_point(snapshot)
+                time.sleep(0.001)
+    a.barrier_op(a.world_comm)
+    while a._ckpt_pending():
+        if ctx.faults is not None:
+            ctx.faults.on_step(ctx.rank, step, ckpt_pending=True)
+        a.safe_point(snapshot)
+        time.sleep(0.002)
+    while recvd[0] < 10:  # pipeline tail
+        m = a.recv((ctx.rank - 1) % ctx.n, timeout=60)
+        assert int.from_bytes(m.payload, "big") == recvd[0]
+        recvd[0] += 1
+    return {"recvd": recvd[0]}
+
+
+def test_rank_failure_detected_and_typed(transport):
+    """A killed rank surfaces as a typed RankFailure (not a hang, not a
+    WorldError), promptly, with the committed image attached."""
+    t0 = time.monotonic()
+    with pytest.raises(RankFailure) as ei:
+        run_world(transport, 4, _recovery_job, timeout=120,
+                  faults=FaultPlan(0).kill(2, at_step=6))
+    rf = ei.value
+    assert rf.ranks == [2]
+    assert rf.committed_image is not None
+    assert rf.committed_image["epoch"] == 1
+    assert sorted(rf.committed_image["ranks"]) == [0, 1, 2, 3]
+    # prompt: nowhere near the world timeout
+    assert time.monotonic() - t0 < 60
+
+
+def test_rank_failure_aborts_inflight_2pc(transport):
+    """A mid-phase-1 kill (victim observed intent, never parked) must
+    ABORT the epoch and withdraw the parked survivors — the dead-rank
+    bookkeeping is load-bearing, not decorative."""
+    plan = (FaultPlan(0).kill(2, at_step=0, when_pending=True)
+            .straggle(3, at_step=0, seconds=0.4, when_pending=True))
+    with pytest.raises(RankFailure) as ei:
+        run_world(transport, 4, _recovery_job, timeout=120, faults=plan,
+                  unblock_window=0.15)
+    assert ei.value.ranks == [2]
+    # the checkpoint the victim observed can never have committed, so
+    # there is no committed image at all
+    assert ei.value.committed_image is None
+
+
+def test_supervised_restart_from_committed_image(transport):
+    """The supervisor relaunches from the last committed image; the
+    restarted incarnation proves the ring state was restored (drained
+    messages re-delivered, sequence numbers continue at the cut)."""
+    n = 4
+
+    def fn_factory(attempt, image):
+        if image is None:
+            return _recovery_job
+
+        snaps = image["ranks"]
+
+        def resumed(ctx):
+            from repro.comm.transport.harness import restore_agent_from_blob
+            blob = snaps[str(ctx.rank)]
+            restore_agent_from_blob(ctx, blob["agent"])
+            for vid, ranks in ctx.agent.comms.active().items():
+                if tuple(ranks) == tuple(range(n)):
+                    ctx.agent.world_comm = vid
+            # replay the §III-B drain backlog: re-delivered messages
+            # must continue the ring sequence seamlessly at the cut
+            backlog = len(ctx.ep.drain_buffer)
+            prev = (ctx.rank - 1) % n
+            seq = blob["recvd"]
+            for _ in range(backlog):
+                m = ctx.agent.recv(prev, timeout=60)
+                assert int.from_bytes(m.payload, "big") == seq, (seq, m)
+                seq += 1
+            assert len(ctx.ep.drain_buffer) == 0
+            return {"resumed_from": blob["step"], "replayed": backlog}
+
+        return resumed
+
+    sup = run_world_supervised(
+        transport, n, fn_factory, max_restarts=2,
+        faults_for_attempt=lambda a: (FaultPlan(0).kill(1, at_step=6)
+                                      if a == 0 else None),
+        timeout=120)
+    assert sup.attempts == 2 and len(sup.failures) == 1
+    assert sup.failures[0]["failed_ranks"] == [1]
+    assert sup.failures[0]["image_epoch"] == 1
+    # the pipelined ring guarantees in-flight traffic at the cut; every
+    # replayed message passed the seq-continuity assert in `resumed`
+    assert sum(v["replayed"] for v in sup.result.results.values()) >= 1
+
+
+def test_supervised_restart_crosses_transports():
+    """Failure on one backend, recovery on the other: the committed
+    image is transport-free JSON, so the supervisor can rebuild the
+    lower half over a different network (§II-A at the harness level)."""
+    if len(TRANSPORTS) < 2:
+        pytest.skip("only one backend registered")
+
+    seen = []
+
+    def fn_factory(attempt, image):
+        seen.append((attempt, None if image is None else image["epoch"]))
+        return _recovery_job if image is None else (lambda ctx: "resumed")
+
+    sup = run_world_supervised(
+        list(TRANSPORTS), 4, fn_factory, max_restarts=2,
+        faults_for_attempt=lambda a: (FaultPlan(0).kill(3, at_step=7)
+                                      if a == 0 else None),
+        timeout=120)
+    assert sup.attempts == 2
+    assert sup.final_transport == TRANSPORTS[1] != TRANSPORTS[0]
+    assert seen == [(0, None), (1, 1)]
+
+
+def test_missed_heartbeats_declare_failure():
+    """A hung-but-connected rank (heartbeats stop, no EOF) is declared
+    failed by the server's heartbeat monitor."""
+    w = create_world("inproc", 2)
+    try:
+        server, clients = make_control_plane(w, heartbeat_timeout=0.3)
+        clients[0].start_heartbeat(0.05)
+        clients[1].start_heartbeat(0.05)
+        time.sleep(0.15)
+        clients[1].stop_heartbeat()   # rank 1 "hangs"
+        _wait(server.failure_event.is_set, timeout=5,
+              what="missed-heartbeat failure")
+        assert server.failed == [1]
+        assert server.coord.rank_state[1] == Coordinator.DEAD
+        assert server.coord.rank_state[0] != Coordinator.DEAD
+        server.stop()
+    finally:
+        w.close()
+
+
+def test_clean_goodbye_is_not_a_failure():
+    """EOF after a goodbye (clean exit) must not trip failure
+    detection — the socket switch orders the goodbye before the EOF
+    notice on the coordinator connection."""
+    res = run_world("socket", 2, lambda ctx: "done", timeout=60)
+    assert res.results == {0: "done", 1: "done"}
+    assert res.coord_stats["rank_failures"] == 0
+
+
+def test_poisoned_endpoint_unblocks_recv():
+    w = create_world("inproc", 2)
+    try:
+        box = {}
+
+        def blocked():
+            try:
+                w.endpoints[1].recv(0, timeout=30)
+            except TransportClosed as e:
+                box["err"] = str(e)
+
+        t = threading.Thread(target=blocked, daemon=True)
+        t.start()
+        time.sleep(0.05)
+        w.endpoints[1].poison("test teardown")
+        t.join(timeout=5)
+        assert "test teardown" in box["err"]
+    finally:
+        w.close()
+
+
+def test_runtime_checkpoints_under_injected_delays(tmp_path):
+    """MANARuntime's checkpoint cycle (intent, park, drain, commit)
+    tolerates seeded control-fabric message delays — the fault plan
+    rides the rebuilt lower half's transport world."""
+    from repro.configs import ARCHS, reduced_config
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.core.runtime import MANARuntime
+
+    cfg = reduced_config(ARCHS["qwen2-0.5b"])
+    rc = RunConfig(model=cfg, shape=ShapeConfig("smoke", 64, 2, "train"),
+                   loss_chunk=32, attn_chunk=16)
+    rt = MANARuntime(cfg, rc, ckpt_dir=str(tmp_path), ckpt_every_steps=2,
+                     fault_plan=_delay_plan(CHAOS_SEEDS[0]))
+    rt.initialize()
+    rt.run(5)
+    assert rt.checkpoints_taken == 2
+    assert rt.ckpt.steps() == [2, 4]
+    rt.close()
+
+
+# ---------------------------------------------------------------------------
+# TCP slow joiner: injected HELLO delay
+# ---------------------------------------------------------------------------
+
+def test_tcp_slow_joiner_hello_delay_preserves_fifo():
+    """Rank 1 HELLOs late; everything sent to it meanwhile queues at
+    the switch and must flush at the join preserving per-(src, tag)
+    FIFO — including messages racing in right after the join."""
+    n = 2
+    switch = FabricSwitch(coord_rank=n)
+    plan = FaultPlan(0).delay_hello(1, 0.25)
+    t0 = SocketTransport(n, 0, switch.addr)
+    box = {}
+
+    def join_late():
+        box["t1"] = SocketTransport(n, 1, switch.addr, fault_plan=plan)
+
+    th = threading.Thread(target=join_late, daemon=True)
+    th.start()
+    # pre-join traffic on interleaved tags: all of it queues
+    for i in range(30):
+        t0.endpoint.send(1, f"pre{i}".encode(), tag=i % 3)
+    th.join(timeout=10)
+    t1 = box["t1"]
+    # post-join traffic races the backlog flush
+    for i in range(30, 45):
+        t0.endpoint.send(1, f"post{i}".encode(), tag=i % 3)
+    try:
+        e1 = t1.endpoint
+        for tag in range(3):
+            want = ([f"pre{i}".encode() for i in range(30) if i % 3 == tag]
+                    + [f"post{i}".encode() for i in range(30, 45)
+                       if i % 3 == tag])
+            got = [e1.recv(0, tag, timeout=10).payload
+                   for _ in range(len(want))]
+            assert got == want, (tag, got[:5], want[:5])
+    finally:
+        t0.close()
+        t1.close()
+        switch.close()

@@ -13,7 +13,7 @@ except ImportError:  # minimal env: deterministic fallback sampler
     from _hypothesis_fallback import given, settings, st
 
 from repro.comm.fabric import Fabric
-from repro.core.coordinator import Coordinator
+from repro.core.coordinator import CheckpointAborted, Coordinator
 from repro.core.drain import DrainError, centralized_drain, drain_rank
 from repro.core.two_phase_commit import RankAgent
 from repro.core.virtual import comm_gid
@@ -334,6 +334,110 @@ def test_dead_rank_unblocks_phase1_closure():
     coord2.mark_dead(0)
     assert 2 not in coord2.phase1_closed
     assert coord2.intent_epoch not in coord2.phase1_closed
+
+
+def test_fail_rank_aborts_inflight_epoch_and_withdraws_parked():
+    """A rank CRASH (fail_rank — the EOF/heartbeat path) is the dual of
+    mark_dead: the in-flight epoch can never be drained or snapshotted
+    by the dead rank, so it must ABORT, releasing parked ranks with an
+    "abort" verdict instead of closing on an invalid cut."""
+    N = 3
+    coord = Coordinator(N, unblock_window=60.0)
+    coord.request_checkpoint()
+    results = {}
+
+    def park(r):
+        results[r] = coord.try_park(r, 1, {}, timeout=30)
+
+    threads = [threading.Thread(target=park, args=(r,), daemon=True)
+               for r in (0, 1)]
+    for t in threads:
+        t.start()
+    while sum(1 for r in (0, 1)
+              if coord.rank_state[r] == Coordinator.PARKED) < 2:
+        time.sleep(0.001)
+    assert coord.fail_rank(2)            # the missing rank CRASHES
+    for t in threads:
+        t.join(timeout=30)
+    assert results == {0: "abort", 1: "abort"}, results
+    assert 1 in coord.aborted_epochs
+    assert coord.stats["rank_failures"] == 1
+    assert coord.failed_ranks == [2]
+    assert not coord.fail_rank(2)        # idempotent: already dead
+    assert coord.stats["rank_failures"] == 1
+    # a commit round in flight at the crash must also unblock: phase-2
+    # waiters observe the abort instead of waiting for a dead rank
+    with pytest.raises(CheckpointAborted):
+        coord.wait_all_committed(1, timeout=5)
+
+
+def test_fail_rank_mid_commit_does_not_falsely_complete():
+    """The crash may SHRINK the live set to exactly the already-reported
+    commit count; the abort must still win (the dead rank's snapshot is
+    missing, so the cut cannot be declared done)."""
+    N = 2
+    coord = Coordinator(N, unblock_window=60.0)
+    coord.request_checkpoint()
+    verdicts = {}
+    threads = [threading.Thread(
+        target=lambda r=r: verdicts.update({r: coord.try_park(r, 1, {},
+                                                              timeout=30)}),
+        daemon=True) for r in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30)
+    assert verdicts == {0: "safe", 1: "safe"}
+    coord.report_committed(0)     # commit_count == 1
+    coord.fail_rank(1)            # live shrinks to 1 == commit_count
+    with pytest.raises(CheckpointAborted):
+        coord.wait_all_committed(1, timeout=5)
+    assert coord.done_epoch == 0 and coord.stats["checkpoints"] == 0
+
+
+def test_watchdog_withdraws_all_parked_ranks_when_straggler_races_past_intent():
+    """§III-J watchdog: a straggler raced past the intent flag into a
+    long collective and cannot report, so phase-1 closure stalls.  The
+    watchdog must withdraw EVERY parked rank ("continue" — training
+    resumes) instead of holding the fleet parked; when the straggler
+    finally reaches a safe point, the retried checkpoint closes."""
+    N = 4
+    coord = Coordinator(N, unblock_window=0.1)
+    coord.request_checkpoint()
+    first_round = {}
+
+    def park(r, out):
+        out[r] = coord.try_park(r, 1, {}, timeout=30)
+
+    # ranks 0..2 park; rank 3 is the straggler: it never reports (it
+    # raced past the intent flag before the request landed)
+    threads = [threading.Thread(target=park, args=(r, first_round),
+                                daemon=True) for r in range(N - 1)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    elapsed = time.monotonic() - t0
+    # all parked ranks were withdrawn by the watchdog — promptly (the
+    # unblock window, not the 30s park timeout), and the epoch was NOT
+    # aborted: the checkpoint is delayed, never abandoned
+    assert first_round == {r: "continue" for r in range(N - 1)}, first_round
+    assert elapsed < 5.0, elapsed
+    assert coord.stats["watchdog_withdrawals"] >= N - 1
+    assert coord.stats["aborts"] == 0
+    assert 1 not in coord.aborted_epochs
+    assert all(coord.rank_state[r] == Coordinator.RUNNING
+               for r in range(N))  # training resumed everywhere
+    # the straggler exits its collective; everyone retries and closes
+    second_round = {}
+    threads = [threading.Thread(target=park, args=(r, second_round),
+                                daemon=True) for r in range(N)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert second_round == {r: "safe" for r in range(N)}, second_round
 
 
 def test_request_during_phase2_does_not_abort_inflight_commit():
