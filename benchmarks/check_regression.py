@@ -105,6 +105,38 @@ def main() -> int:
             f"tree collectives only {speedup:.2f}x linear at {GUARD_N} "
             f"ranks (required >= {args.min_speedup}x)")
 
+    # the async incremental checkpoint pipeline (ISSUE 4), guarded
+    # machine-relatively from the SAME fresh run: staging + background
+    # writer must beat the synchronous protocol's in-safe-point stall,
+    # and incremental images must be well under full images on
+    # small-change steps.  Records are optional in older artifacts.
+    stall_sync = _match(cur, name="ckpt_stall", n=GUARD_N, mode="sync")
+    stall_async = _match(cur, name="ckpt_stall", n=GUARD_N, mode="async")
+    if stall_sync and stall_async:
+        s_us = stall_sync[0]["stall_us_per_ckpt"]
+        a_us = stall_async[0]["stall_us_per_ckpt"]
+        print(f"ckpt stall       n={GUARD_N}: sync {s_us:.0f}us, "
+              f"async {a_us:.0f}us (async/sync {a_us / s_us:.2f}x)")
+        if a_us > 0.9 * s_us:
+            failures.append(
+                f"async checkpoint stall not measurably below sync at "
+                f"{GUARD_N} ranks: async {a_us:.0f}us vs sync "
+                f"{s_us:.0f}us (required <= 0.9x)")
+    full_b = _match(cur, name="ckpt_image_bytes", n=GUARD_N,
+                    encoding="full")
+    delta_b = _match(cur, name="ckpt_image_bytes", n=GUARD_N,
+                     encoding="delta")
+    if full_b and delta_b:
+        f_b = full_b[0]["bytes_per_rank_ckpt"]
+        d_b = delta_b[0]["bytes_per_rank_ckpt"]
+        print(f"ckpt image bytes n={GUARD_N}: full {f_b:.0f}B, "
+              f"delta {d_b:.0f}B (delta/full {d_b / f_b:.3f})")
+        if d_b > 0.5 * f_b:
+            failures.append(
+                f"incremental images not measurably smaller than full "
+                f"at {GUARD_N} ranks: delta {d_b:.0f}B vs full "
+                f"{f_b:.0f}B (required <= 0.5x)")
+
     # transport invariance: virtual latencies agree across backends
     transports = sorted({r.get("transport", "inproc") for r in cur
                          if r.get("name") == "fig4_collective_rate"})

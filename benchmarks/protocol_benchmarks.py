@@ -364,6 +364,126 @@ def recovery_latency(transport: str = "inproc", n: int = 8,
     return rows
 
 
+def _ckpt_pipeline_worker(n, shard_kb, steps, every, async_ckpt, mutate_frac):
+    """One rank of the checkpoint-pipeline benchmark job: a per-rank
+    float32 shard mutated a little each step (small-change steps), row
+    allreduces, checkpoints every `every` steps through an
+    `IncrementalSnapshotter` (full image every 4 checkpoints, XOR
+    deltas between).  Sync arm: encode + ship inside the safe point.
+    Async arm: stage only; the background writer encodes and ships."""
+    import numpy as np
+
+    from repro.comm.transport.harness import row_width
+    from repro.core.codec import ChainPolicy, IncrementalSnapshotter
+
+    row_w = row_width(n)
+
+    def work(ctx):
+        a, r = ctx.agent, ctx.rank
+        snapper = IncrementalSnapshotter(ChainPolicy(full_every=4))
+        rng = np.random.RandomState(r)
+        shard = rng.randn(shard_kb * 256).astype(np.float32)  # kb / 4B
+        state = {"shard": shard}
+        base = (r // row_w) * row_w
+        a.row = a.create_comm(range(base, base + row_w))
+        stalls: List[float] = []
+        sizes: List = []
+        mut = max(1, int(shard.size * mutate_frac))
+
+        def snapshot():
+            produce = snapper.stage(a.ckpt_epoch, state,
+                                    extra={"step": step})
+            if async_ckpt:
+                return produce
+            blob = produce()
+            sizes.append((blob["encoding"], blob["payload_bytes"]))
+            ctx.coord.ship_snapshot(a.ckpt_epoch, blob)
+
+        step = 0
+        for step in range(steps):
+            if r == 0 and step and step % every == 0:
+                ctx.coord.request_checkpoint()
+            lo = (step * mut) % (shard.size - mut)
+            state["shard"][lo:lo + mut] += 1.0
+            a.allreduce(a.row, 1, lambda x, y: x + y)
+            if a._ckpt_pending() and a.safe_point(snapshot):
+                # post-closure stall: drain-barrier back to compute
+                # (agent-measured; excludes phase-1 alignment skew)
+                stalls.append(a.last_commit_stall_s)
+        a.barrier_op(a.world_comm)
+        while a._ckpt_pending():
+            if a.safe_point(snapshot):
+                stalls.append(a.last_commit_stall_s)
+            time.sleep(0.002)
+        a.drain_writer()
+        return {"stalls": stalls, "sizes": sizes}
+
+    return work
+
+
+def checkpoint_pipeline(transport: str = "inproc", ranks=(64,),
+                        shard_kb: int = 64, steps: int = 9, every: int = 3,
+                        mutate_frac: float = 0.01,
+                        results: Optional[List[Dict]] = None) -> List[str]:
+    """The async incremental checkpoint pipeline (ISSUE 4 tentpole):
+
+      * ckpt_stall — wall-clock rank compute-stall per checkpoint, the
+        SYNC protocol (encode + ship + commit round trips inside the
+        safe point) vs the ASYNC split (stage + resume; background
+        writer + writer-ack commit).  The perf guard requires async to
+        beat sync at 64 ranks — both numbers come from the same fresh
+        run, so host speed cancels.
+      * ckpt_image_bytes — encoded image bytes per rank-checkpoint,
+        FULL images vs incremental DELTA images on small-change steps
+        (`mutate_frac` of the shard touched per step).  The guard
+        requires deltas to be well under half the full size.
+    """
+    from repro.comm.transport.harness import run_world
+
+    rows = []
+    for n in ranks:
+        size_by_enc: Dict[str, List[float]] = {}
+        stall_by_mode: Dict[str, float] = {}
+        for mode in ("sync", "async"):
+            res = run_world(
+                transport, n,
+                _ckpt_pipeline_worker(n, shard_kb, steps, every,
+                                      mode == "async", mutate_frac),
+                async_ckpt=mode == "async", unblock_window=0.5,
+                timeout=300)
+            stalls = [s for v in res.results.values() for s in v["stalls"]]
+            ckpts = res.coord_stats["checkpoints"]
+            stall_us = 1e6 * sum(stalls) / max(len(stalls), 1)
+            stall_by_mode[mode] = stall_us
+            rows.append(f"ckpt_stall_{mode}_{transport}_n{n},"
+                        f"{stall_us:.0f},ckpts={ckpts}")
+            if results is not None:
+                results.append({
+                    "name": "ckpt_stall", "transport": transport, "n": n,
+                    "mode": mode, "stall_us_per_ckpt": stall_us,
+                    "ckpts": ckpts, "shard_kb": shard_kb})
+            for enc, nbytes in (s for v in res.results.values()
+                                for s in v["sizes"]):
+                size_by_enc.setdefault(enc, []).append(nbytes)
+        if stall_by_mode["async"]:
+            rows.append(f"ckpt_stall_speedup_{transport}_n{n},,"
+                        f"sync/async="
+                        f"{stall_by_mode['sync'] / stall_by_mode['async']:.2f}")
+        for enc in ("full", "delta"):
+            vals = size_by_enc.get(enc)
+            if not vals:
+                continue
+            mean_b = sum(vals) / len(vals)
+            rows.append(f"ckpt_image_bytes_{enc}_{transport}_n{n},,"
+                        f"bytes={mean_b:.0f}")
+            if results is not None:
+                results.append({
+                    "name": "ckpt_image_bytes", "transport": transport,
+                    "n": n, "encoding": enc, "bytes_per_rank_ckpt": mean_b,
+                    "shard_kb": shard_kb, "mutate_frac": mutate_frac})
+    return rows
+
+
 def drain_scaling(ranks=(4, 8, 16, 32, 64, 128, 256),
                   results: Optional[List[Dict]] = None) -> List[str]:
     import threading

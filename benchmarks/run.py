@@ -53,6 +53,10 @@ def main() -> None:
         # supervised rank-failure recovery over real processes
         rows += protocol_benchmarks.recovery_latency(
             "socket", results=results)
+        # async incremental checkpoint pipeline over real processes
+        # (forked writers); small n — the guarded arm is inproc n=64
+        rows += protocol_benchmarks.checkpoint_pipeline(
+            "socket", ranks=(8,), results=results)
     if transport == "socket":
         pass  # socket-only run: skip the inproc suites below
     elif smoke:
@@ -64,6 +68,10 @@ def main() -> None:
             ranks=(4, 8, 64), results=results)
         rows += protocol_benchmarks.recovery_latency(
             "inproc", results=results)
+        # the ISSUE-4 guarded records: stall sync vs async + image
+        # bytes full vs delta at the 64-rank guard point
+        rows += protocol_benchmarks.checkpoint_pipeline(
+            "inproc", ranks=(64,), results=results)
     else:
         from benchmarks import kernel_bench, roofline
 
@@ -82,6 +90,9 @@ def main() -> None:
             results=results)
         rows += protocol_benchmarks.recovery_latency(
             "inproc", results=results)
+        rows += protocol_benchmarks.checkpoint_pipeline(
+            "inproc", ranks=(8,) if quick else (64, 256),
+            results=results)
         rows += kernel_bench.kernel_throughput(mb=4 if quick else 16)
         rows += roofline.rows()
 

@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Docs drift guards: fail when the docs and the code disagree.
+
+Three checks (each also run as a tier-1 test via tests/test_docs.py):
+
+  1. PROTOCOL.md's control-op table == the op registry
+     `repro.core.control.CTRL_OPS` (op names, direction, blocking kind).
+  2. README's "Example flags" table == the actual argparse surface of
+     examples/multirank_simulation.py (and the example's generated
+     epilog lists every flag).
+  3. docs/quickstart.sh's commands all appear verbatim in the README —
+     the quickstart is the README's run instructions in executable
+     form, so the README cannot document commands CI never runs.
+
+Usage:  python docs/check_docs_drift.py   (exit 1 on any drift)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, os.path.join(ROOT, "examples"))
+
+
+def _read(*parts: str) -> str:
+    with open(os.path.join(ROOT, *parts)) as f:
+        return f.read()
+
+
+def _md_table_rows(text: str, anchor: str):
+    """Yield the cell lists of the first markdown table after `anchor`."""
+    lines = text[text.index(anchor):].splitlines()
+    in_table = False
+    for line in lines:
+        if line.startswith("|"):
+            cells = [c.strip() for c in line.strip("|\n").split("|")]
+            if set(cells[0]) <= {"-", " ", ":"}:  # separator row
+                continue
+            in_table = True
+            yield cells
+        elif in_table:
+            return
+
+
+def check_protocol_op_table() -> list:
+    """PROTOCOL.md op table vs repro.core.control.CTRL_OPS."""
+    from repro.core.control import CTRL_OPS
+    errors = []
+    doc = {}
+    for cells in _md_table_rows(_read("docs", "PROTOCOL.md"),
+                                "## Control ops"):
+        m = re.match(r"`([a-z_]+)`", cells[0])
+        if not m:
+            continue  # header row
+        doc[m.group(1)] = {"dir": cells[1],
+                           "blocking": cells[2] == "blocking"}
+    for op in sorted(set(CTRL_OPS) - set(doc)):
+        errors.append(f"PROTOCOL.md op table is missing op {op!r} "
+                      f"(present in control.CTRL_OPS)")
+    for op in sorted(set(doc) - set(CTRL_OPS)):
+        errors.append(f"PROTOCOL.md documents unknown op {op!r} "
+                      f"(absent from control.CTRL_OPS)")
+    for op in sorted(set(doc) & set(CTRL_OPS)):
+        if doc[op]["blocking"] != CTRL_OPS[op]["blocking"]:
+            errors.append(
+                f"PROTOCOL.md kind for {op!r} disagrees with the "
+                f"registry (registry blocking="
+                f"{CTRL_OPS[op]['blocking']})")
+        if doc[op]["dir"] != CTRL_OPS[op]["dir"]:
+            errors.append(
+                f"PROTOCOL.md direction for {op!r} is {doc[op]['dir']!r},"
+                f" registry says {CTRL_OPS[op]['dir']!r}")
+    return errors
+
+
+def check_example_flags() -> list:
+    """README 'Example flags' table + example epilog vs the parser."""
+    import multirank_simulation as sim
+    errors = []
+    parser = sim.build_parser()
+    flags = {s for a in parser._actions for s in a.option_strings
+             if s.startswith("--") and s != "--help"}
+    doc_flags = set()
+    for cells in _md_table_rows(_read("README.md"), "## Example flags"):
+        m = re.match(r"`(--[a-z-]+)`", cells[0])
+        if m:
+            doc_flags.add(m.group(1))
+    for f in sorted(flags - doc_flags):
+        errors.append(f"README 'Example flags' table is missing {f} "
+                      f"(present in the example's argparse)")
+    for f in sorted(doc_flags - flags):
+        errors.append(f"README documents flag {f} that the example "
+                      f"no longer has")
+    epilog = parser.epilog or ""
+    for f in sorted(flags):
+        if f not in epilog:
+            errors.append(f"example --help epilog is missing {f}")
+    return errors
+
+
+def check_quickstart_in_readme() -> list:
+    """Every quickstart.sh command line appears verbatim in the README."""
+    errors = []
+    readme = re.sub(r"[ \t]+", " ", _read("README.md").replace("\\\n", " "))
+    script = _read("docs", "quickstart.sh")
+    for line in script.splitlines():
+        line = line.strip().rstrip("\\").strip()
+        if (not line or line.startswith("#") or line.startswith("set ")
+                or line.startswith("cd ") or line.startswith("export ")
+                or line == "fi" or line.startswith("if ")):
+            continue
+        if re.sub(r"[ \t]+", " ", line) not in readme:
+            errors.append(f"quickstart.sh command not found in README: "
+                          f"{line!r}")
+    return errors
+
+
+def check_architecture_linked() -> list:
+    errors = []
+    if not os.path.exists(os.path.join(ROOT, "docs", "ARCHITECTURE.md")):
+        errors.append("docs/ARCHITECTURE.md is missing")
+    readme = _read("README.md")
+    for doc in ("docs/ARCHITECTURE.md", "docs/PROTOCOL.md"):
+        if doc not in readme:
+            errors.append(f"README does not link {doc}")
+    return errors
+
+
+CHECKS = (check_protocol_op_table, check_example_flags,
+          check_quickstart_in_readme, check_architecture_linked)
+
+
+def main() -> int:
+    failures = []
+    for check in CHECKS:
+        failures.extend(check())
+    for f in failures:
+        print(f"DRIFT: {f}", file=sys.stderr)
+    if not failures:
+        print("docs drift guards: OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Quickstart — the README's run instructions in executable form.
+#
+# Executed by the CI `docs` job, and docs/check_docs_drift.py verifies
+# every command below appears verbatim in the README — so the README
+# can never document commands that no longer run.
+#
+# Scaled down (MANA_DEMO_RANKS / --quick) so the whole script finishes
+# in a couple of minutes on a laptop; the CI slow/transport/chaos jobs
+# run the full-size variants.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+export MANA_DEMO_RANKS="${MANA_DEMO_RANKS:-16}"
+
+# checkpoint under threads, restore under one-process-per-rank TCP
+python examples/multirank_simulation.py --quick --transport-a inproc --transport-b socket
+
+# the same round trip on the asynchronous incremental pipeline
+python examples/multirank_simulation.py --quick --async-ckpt
+
+# supervised chaos: seeded rank kills + auto-restart from the image
+python examples/multirank_simulation.py --chaos --quick --seed 7
+
+# the example's flag surface (drift-guarded against the README table)
+python examples/multirank_simulation.py --help

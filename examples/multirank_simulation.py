@@ -44,7 +44,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.comm.transport import FaultPlan, available_transports
 from repro.comm.transport.harness import (restore_agent_from_blob,
-                                          run_world, run_world_supervised)
+                                          row_width, run_world,
+                                          run_world_supervised)
 
 STEPS_A, STEPS_B, LAG = 10, 6, 2
 CKPT_STEP_A, CKPT_STEP_B = 4, 3
@@ -52,11 +53,20 @@ CKPT_STEP_A, CKPT_STEP_B = 4, 3
 CHAOS_STEPS, CHAOS_CKPT_EVERY, CHAOS_KILLS = 24, 6, 3
 
 
-def parse_args():
-    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+def build_parser() -> argparse.ArgumentParser:
+    """The example's CLI.  The epilog's flag list is GENERATED from the
+    parser itself, and the docs CI job (docs/check_docs_drift.py, also
+    run by tests/test_docs.py) diffs these flags against the README's
+    flag table — so neither the epilog nor the README can silently
+    drift from the actual argparse surface again."""
+    p = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.RawDescriptionHelpFormatter)
     p.add_argument("--quick", action="store_true",
                    help="scale the job down for fast runs")
-    p.add_argument("--ranks", type=int, default=None)
+    p.add_argument("--ranks", type=int, default=None,
+                   help="world size (default: 256, or 32 with --quick; "
+                        "chaos mode: 64 / 16; MANA_DEMO_RANKS overrides)")
     p.add_argument("--transport-a", default="inproc",
                    choices=available_transports(),
                    help="transport the job is checkpointed under")
@@ -65,6 +75,11 @@ def parse_args():
                    help="transport the job is restored under")
     p.add_argument("--image", default=None,
                    help="checkpoint image path (default: a temp file)")
+    p.add_argument("--async-ckpt", action="store_true",
+                   help="asynchronous checkpoint pipeline: ranks resume "
+                        "compute right after staging; a background "
+                        "writer ships snapshots and the commit is gated "
+                        "on writer acks")
     p.add_argument("--chaos", action="store_true",
                    help="supervised chaos mode: seeded rank kills + "
                         "auto-restart from the last committed image")
@@ -78,7 +93,16 @@ def parse_args():
     p.add_argument("--log-dir", default=None,
                    help="chaos mode: write attempt records, the failing "
                         "seed and the last image here (CI artifacts)")
-    args = p.parse_args()
+    flags = sorted(s for a in p._actions for s in a.option_strings
+                   if s.startswith("--") and s != "--help")
+    p.epilog = ("flags: " + " ".join(flags)
+                + "\n(documented one-by-one in README.md 'Example flags';"
+                  " docs CI diffs that table against this parser)")
+    return p
+
+
+def parse_args(argv=None):
+    args = build_parser().parse_args(argv)
     if args.ranks is None:
         if args.chaos:
             args.ranks = int(os.environ.get("MANA_DEMO_RANKS",
@@ -87,10 +111,6 @@ def parse_args():
             args.ranks = int(os.environ.get("MANA_DEMO_RANKS",
                                             "32" if args.quick else "256"))
     return args
-
-
-def row_width(n):
-    return 16 if n % 16 == 0 else max(d for d in (8, 4, 2, 1) if n % d == 0)
 
 
 def payload(src, seq):
@@ -162,9 +182,10 @@ def watch_stragglers(server):
               f"rank(s) not at a safe point yet, e.g. {sample}")
 
 
-def phase_a(n, transport, image_path):
+def phase_a(n, transport, image_path, async_ckpt=False):
     res = run_world(transport, n, make_phase_a(n), unblock_window=0.5,
-                    timeout=300, on_running=watch_stragglers)
+                    timeout=300, async_ckpt=async_ckpt,
+                    on_running=watch_stragglers)
     assert len(res.results) == n and res.coord_stats["checkpoints"] == 1
     drained = sum(len(s["agent"]["drain_buffer"])
                   for s in res.results.values())
@@ -240,7 +261,7 @@ def make_phase_b(n, snaps, from_transport, to_transport):
     return work
 
 
-def phase_b(n, transport, image_path):
+def phase_b(n, transport, image_path, async_ckpt=False):
     with open(image_path) as f:
         image = json.load(f)
     assert image["n_ranks"] == n
@@ -249,7 +270,7 @@ def phase_b(n, transport, image_path):
           f"onto a fresh {transport!r} world")
     res = run_world(transport, n,
                     make_phase_b(n, snaps, image["transport"], transport),
-                    unblock_window=0.5, timeout=300)
+                    unblock_window=0.5, timeout=300, async_ckpt=async_ckpt)
     assert len(res.results) == n and res.coord_stats["checkpoints"] == 1
     # §III-B closure in the RESTORED world: every ring pair's byte
     # counters balance once the traffic of phase B is fully consumed
@@ -268,7 +289,7 @@ def phase_b(n, transport, image_path):
 # committed image (the NERSC-production reliability scenario)
 # ---------------------------------------------------------------------------
 
-def make_chaos_worker(n, image, target, ckpt_every):
+def make_chaos_worker(n, image, target, ckpt_every, async_ckpt=False):
     """One incarnation of the chaos training job: a pipelined ring
     (receives lag sends, so messages are ALWAYS in flight) plus per-row
     allreduces, checkpointing every `ckpt_every` steps.  Each commit
@@ -297,10 +318,15 @@ def make_chaos_worker(n, image, target, ckpt_every):
         step = start
 
         def snapshot():
-            # shipped at commit time under the ADOPTED epoch; JSON-safe
-            ctx.coord.ship_snapshot(a.ckpt_epoch, {
-                "step": step, "recvd": recvd, "world_comm": a.world_comm,
-                "row": a.row, "agent": a.serialize()})
+            # captured at the cut under the ADOPTED epoch; JSON-safe
+            payload = {"step": step, "recvd": recvd,
+                       "world_comm": a.world_comm, "row": a.row,
+                       "agent": a.serialize()}
+            if async_ckpt:
+                # async pipeline: stage only — the background writer
+                # ships the blob and acks; compute resumes immediately
+                return lambda: payload
+            ctx.coord.ship_snapshot(a.ckpt_epoch, payload)
 
         for step in range(start, target):
             # cadence checkpoints, plus an early post-restart one (a
@@ -386,15 +412,18 @@ def chaos_main(args):
         print(f">>> chaos attempt {attempt}: resume step {resume} "
               f"(image epoch {image['epoch'] if image else None}), "
               f"{what}")
-        return make_chaos_worker(n, image, target, every)
+        return make_chaos_worker(n, image, target, every,
+                                 async_ckpt=args.async_ckpt)
 
     t0 = time.perf_counter()
     print(f"=== {n}-rank CHAOS run: seed {seed}, {kills} injected kills, "
-          f"checkpoint every {every} steps, transport(s) {transports} ===")
+          f"checkpoint every {every} steps, transport(s) {transports}, "
+          f"{'async' if args.async_ckpt else 'sync'} checkpoints ===")
     sup = run_world_supervised(
         transports, n, fn_factory, max_restarts=kills + 2,
         faults_for_attempt=lambda a: schedule.get(a, (None,))[0],
-        unblock_window=0.5, timeout=300, log_dir=args.log_dir)
+        unblock_window=0.5, timeout=300, log_dir=args.log_dir,
+        async_ckpt=args.async_ckpt)
 
     # every rank finished the horizon with the ring sequence intact
     assert len(sup.result.results) == n
@@ -448,9 +477,10 @@ def main():
     t0 = time.perf_counter()
     print(f"=== {n}-rank checkpoint -> drain -> restore round trip "
           f"(rows of {row_width(n)}, tree collectives, "
-          f"{args.transport_a} -> {args.transport_b}) ===")
-    phase_a(n, args.transport_a, image_path)
-    phase_b(n, args.transport_b, image_path)
+          f"{args.transport_a} -> {args.transport_b}, "
+          f"{'async' if args.async_ckpt else 'sync'} checkpoints) ===")
+    phase_a(n, args.transport_a, image_path, args.async_ckpt)
+    phase_b(n, args.transport_b, image_path, args.async_ckpt)
     print(f"PASS ({time.perf_counter() - t0:.1f}s)")
 
 

@@ -1,0 +1,10 @@
+"""MANA-2.0 reproduction: transparent checkpointing of a simulated
+multi-rank MPI world (pluggable transports, hybrid 2PC, async
+incremental checkpoint pipeline) fronting jax/pallas training jobs.
+
+A regular package on purpose: pytest's --doctest-modules collection of
+files under src/ derives the canonical module name (repro.core.codec,
+not core.codec) only when every ancestor has an __init__.py — without
+it, doctest runs import DUPLICATE module objects whose exception types
+fail isinstance checks against the normally-imported ones.
+"""

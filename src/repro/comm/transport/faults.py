@@ -119,6 +119,15 @@ class FaultPlan:
     `run_world(..., faults=...)`, and drive step-indexed faults by
     calling `on_step` at step boundaries (the world harness exposes the
     plan as `ctx.faults`).
+
+    Rules compose fluently and every per-message decision is a pure
+    function of (seed, rule, sender, app-send index):
+
+    >>> plan = FaultPlan(seed=7).kill(3, at_step=5).drop(src=0, dst=1)
+    >>> plan.decide(0, 1, tag=0, send_idx=0).action   # rule matches
+    'drop'
+    >>> plan.decide(2, 3, tag=0, send_idx=0).action   # no rule for 2->3
+    'deliver'
     """
 
     def __init__(self, seed: int = 0):

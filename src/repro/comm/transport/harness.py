@@ -78,6 +78,14 @@ class WorldResult:
     transport: str
 
 
+def row_width(n: int) -> int:
+    """Row-communicator width for the demo/benchmark topology: worlds
+    split into rows of 16 when possible (the examples' and benchmarks'
+    shared convention — the chaos schedule's straggler placement and
+    the guarded 64-rank pipeline records both assume it)."""
+    return 16 if n % 16 == 0 else max(d for d in (8, 4, 2, 1) if n % d == 0)
+
+
 class WorldError(RuntimeError):
     def __init__(self, errors):
         super().__init__(f"{len(errors)} rank(s) failed: "
@@ -87,10 +95,16 @@ class WorldError(RuntimeError):
 
 
 def _make_agent(rank: int, ep: Endpoint, coord, n: int, mode: str,
-                coll_algo: Optional[str], transport_name: str):
+                coll_algo: Optional[str], transport_name: str,
+                async_ckpt: bool = False):
     from repro.core.two_phase_commit import RankAgent
+    writer = None
+    if async_ckpt:
+        from repro.core.snapshot_writer import make_snapshot_writer
+        writer = make_snapshot_writer(transport_name)
     return RankAgent(rank, ep, coord, range(n), mode=mode,
-                     coll_algo=coll_algo, transport=transport_name)
+                     coll_algo=coll_algo, transport=transport_name,
+                     async_commit=async_ckpt, writer=writer)
 
 
 def restore_agent_from_blob(ctx: "WorldContext", agent_blob: Dict) -> None:
@@ -126,20 +140,38 @@ def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
               mode: str = "hybrid", coll_algo: Optional[str] = "tree",
               timeout: float = 300.0, faults: Optional[FaultPlan] = None,
               heartbeat_s: Optional[float] = None,
+              async_ckpt: bool = False,
               on_running: Optional[Callable[[CoordinatorServer], None]] = None,
               ) -> WorldResult:
     """Run `fn` on every rank of a fresh `transport` world and tear the
     world down.  Raises `RankFailure` if a rank crashes (fault
     injection, process death, missed heartbeats) and `WorldError` if a
-    rank raises an ordinary application error."""
+    rank raises an ordinary application error.
+
+    `fn(ctx)` receives a `WorldContext` and its return value lands in
+    `WorldResult.results[ctx.rank]`:
+
+    >>> res = run_world("inproc", 2, lambda ctx: ctx.rank * 10)
+    >>> res.results == {0: 0, 1: 10}
+    True
+    >>> res.transport
+    'inproc'
+
+    With `async_ckpt=True` rank agents run the ASYNC 2PC split: safe
+    points stage the snapshot and return immediately, a per-rank
+    background writer (thread for `inproc`, forked child for `socket`)
+    does serialization + `snap` upload, and the coordinator finalizes
+    the epoch only on every rank's writer ack — see
+    `repro.core.snapshot_writer`.
+    """
     if transport == "inproc":
         return _run_inproc(n, fn, msg_cost_us, unblock_window, mode,
                            coll_algo, timeout, faults, heartbeat_s,
-                           on_running)
+                           async_ckpt, on_running)
     if transport == "socket":
         return _run_socket(n, fn, msg_cost_us, unblock_window, mode,
                            coll_algo, timeout, faults, heartbeat_s,
-                           on_running)
+                           async_ckpt, on_running)
     from repro.comm.transport import available_transports
     raise ValueError(f"unknown transport {transport!r}; "
                      f"registered: {available_transports()}")
@@ -150,7 +182,8 @@ def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
 # ---------------------------------------------------------------------------
 
 def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
-                timeout, faults, heartbeat_s, on_running) -> WorldResult:
+                timeout, faults, heartbeat_s, async_ckpt,
+                on_running) -> WorldResult:
     import threading
 
     world = InprocTransport(n, msg_cost_us=msg_cost_us, fault_plan=faults)
@@ -163,12 +196,16 @@ def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
     def work(r):
         ep = world.endpoints[r]
         coord = clients[r]
-        agent = _make_agent(r, ep, coord, n, mode, coll_algo, "inproc")
+        agent = _make_agent(r, ep, coord, n, mode, coll_algo, "inproc",
+                            async_ckpt)
         if heartbeat_s is not None:
             coord.start_heartbeat(heartbeat_s)
         try:
             results[r] = fn(WorldContext(r, n, ep, agent, coord, world,
                                          faults))
+            # async pipeline: the rank owes the coordinator its writer
+            # acks — finish them before the result counts as clean
+            agent.drain_writer()
         except RankKilled as e:
             # an inproc "crash" is a thread unwinding; the harness (the
             # launcher, playing resource manager) reports the death —
@@ -235,7 +272,7 @@ def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
 # ---------------------------------------------------------------------------
 
 def _socket_child(rank, n, addr, fn, msg_cost_us, mode, coll_algo, faults,
-                  heartbeat_s):
+                  heartbeat_s, async_ckpt):
     tr = SocketTransport(n, rank, addr, msg_cost_us=msg_cost_us,
                          fault_plan=faults)
     ep = tr.endpoint
@@ -244,8 +281,10 @@ def _socket_child(rank, n, addr, fn, msg_cost_us, mode, coll_algo, faults,
         coord.start_heartbeat(heartbeat_s)
     envelope: Dict[str, Any]
     try:
-        agent = _make_agent(rank, ep, coord, n, mode, coll_algo, "socket")
+        agent = _make_agent(rank, ep, coord, n, mode, coll_algo, "socket",
+                            async_ckpt)
         out = fn(WorldContext(rank, n, ep, agent, coord, tr, faults))
+        agent.drain_writer()  # writer acks must precede the goodbye
         envelope = {"ok": out, "vclock": ep.vclock}
     except RankKilled:
         # a CRASH, not an error report: no result, no goodbye — the
@@ -260,7 +299,8 @@ def _socket_child(rank, n, addr, fn, msg_cost_us, mode, coll_algo, faults,
 
 
 def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
-                timeout, faults, heartbeat_s, on_running) -> WorldResult:
+                timeout, faults, heartbeat_s, async_ckpt,
+                on_running) -> WorldResult:
     import multiprocessing
 
     try:
@@ -278,7 +318,7 @@ def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
     ).start()
     procs = [ctx.Process(target=_socket_child, daemon=True,
                          args=(r, n, switch.addr, fn, msg_cost_us, mode,
-                               coll_algo, faults, heartbeat_s))
+                               coll_algo, faults, heartbeat_s, async_ckpt))
              for r in range(n)]
     for p in procs:
         p.start()
@@ -366,6 +406,13 @@ def run_world_supervised(
     On `RankFailure`: record it (to `log_dir` if given), adopt the
     failure's committed image if it carries one, and relaunch.  Raises
     the last `RankFailure` once `max_restarts` is exhausted.
+
+    A fault-free supervised run is one attempt:
+
+    >>> sup = run_world_supervised(
+    ...     "inproc", 2, lambda attempt, image: (lambda ctx: ctx.rank))
+    >>> (sup.attempts, sup.failures, sup.result.results)
+    (1, [], {0: 0, 1: 1})
     """
     names = [transports] if isinstance(transports, str) else list(transports)
     failures: List[Dict] = []

@@ -16,25 +16,36 @@ Write path (the Fig-3 axis):
   checkpoints (keep-N; the paper's retirement/GC lesson applied to
   images).
 
-Optional compression (benchmarked, off by default to keep the
-paper-faithful baseline clean): blockwise int8 quantization for
-optimizer moments, XOR delta against the previous checkpoint.
+Per-array encodings are a pluggable `ImageCodec` STACK
+(`repro.core.codec`): the first codec that claims a path encodes it
+(blockwise int8 quantization for optimizer moments, XOR delta against
+the previous checkpoint for slowly-changing state), `RawCodec` is the
+terminal fallback, and every payload chunk is stamped with a Fletcher
+digest that restore verifies (`use_pallas=True` routes digests and
+deltas through the pallas kernels; the numpy oracles are the fallback).
+Delta chains are bounded: a full image every `full_every` checkpoints
+on the write side, a `max_chain` reconstruction bound on the read side,
+and GC protects the transitive base chain of every kept checkpoint.
 """
 from __future__ import annotations
 
 import json
 import os
 import shutil
-import threading
 import time
+import zlib
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.kernels.checksum.ref import checksum_np
-from repro.kernels.delta import ref as delta_ref
-from repro.kernels.quantize import ref as quant_ref
+from repro.core.codec import (ChainPolicy, CheckpointError, DeltaChainError,
+                              DeltaCodec, ImageCodec, ImageError,
+                              ImageIntegrityError, QuantizeCodec, RawCodec,
+                              shard_digest)
+
+__all__ = ["CheckpointManager", "CheckpointError", "ImageError",
+           "ImageIntegrityError", "DeltaChainError", "MANIFEST"]
 
 MANIFEST = "manifest.json"
 CHUNK_BYTES = 64 << 20  # 64 MiB chunks (burst-buffer-friendly writes)
@@ -58,23 +69,87 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
     return out
 
 
-class CheckpointError(RuntimeError):
-    pass
+class _EncodeCtx:
+    """Write-side codec context: the delta base image (if the chain
+    policy allows another delta) and the kernel/oracle switch."""
+
+    def __init__(self, mgr: "CheckpointManager", base_step: Optional[int]):
+        self._mgr = mgr
+        self.base_step = base_step
+        self.use_pallas = mgr.use_pallas
+
+    def base_array(self, path: str) -> Optional[np.ndarray]:
+        if self.base_step is None:
+            return None
+        return self._mgr._read_array(self._mgr.step_dir(self.base_step),
+                                     path)
+
+
+class _DecodeCtx:
+    """Read-side codec context: resolves a path's delta base from
+    another step's image, with the chain-depth bound enforced."""
+
+    def __init__(self, mgr: "CheckpointManager", path: str, depth: int):
+        self._mgr = mgr
+        self._path = path
+        self._depth = depth
+        self.use_pallas = mgr.use_pallas
+
+    def read_base(self, step: int) -> Optional[np.ndarray]:
+        return self._mgr._read_array(self._mgr.step_dir(step), self._path,
+                                     _depth=self._depth + 1)
 
 
 class CheckpointManager:
+    """File-image checkpoint store with a pluggable codec stack.
+
+    >>> import numpy as np, tempfile
+    >>> d = tempfile.mkdtemp()
+    >>> mgr = CheckpointManager(d, keep=2, delta_keys=("w",))
+    >>> _ = mgr.save(1, {"w": np.zeros(512, np.float32)})
+    >>> _ = mgr.save(2, {"w": np.ones(512, np.float32)})   # XOR delta vs 1
+    >>> mgr.steps()
+    [1, 2]
+    >>> out, extra = mgr.restore()          # newest step, chain rebuilt
+    >>> float(out["w"].sum())
+    512.0
+
+    Encodings are selected per array path by the `codecs` stack (first
+    claim wins; raw is the terminal fallback).  `quantize_keys` /
+    `delta_keys` are sugar for the standard stack; pass `codecs=` for a
+    custom one.  `verify=True` (default) checks every chunk digest at
+    read time and raises a typed `ImageIntegrityError` on mismatch.
+    """
+
     def __init__(self, directory: str, keep: int = 3,
                  quantize_keys: Tuple[str, ...] = (),
                  delta_keys: Tuple[str, ...] = (), verify: bool = True,
-                 full_every: int = 4):
+                 full_every: int = 4, max_chain: int = ChainPolicy.max_chain,
+                 codecs: Optional[Sequence[ImageCodec]] = None,
+                 use_pallas: bool = False, compress: bool = False):
         self.dir = directory
         self.keep = keep
-        self.quantize_keys = quantize_keys
-        self.delta_keys = delta_keys
         self.verify = verify
+        self.use_pallas = use_pallas
+        self.compress = compress
         # delta checkpoints form chains; bound them with periodic fulls
+        # on the write side and a reconstruction-depth cap on the read
+        # side (the two sides may be different processes/configs)
         self.full_every = max(1, full_every)
+        self.max_chain = max_chain
         self._since_full = 0
+        if codecs is None:
+            codecs = []
+            if quantize_keys:
+                codecs.append(QuantizeCodec(tuple(quantize_keys)))
+            if delta_keys:
+                codecs.append(DeltaCodec(tuple(delta_keys)))
+        self.codecs: List[ImageCodec] = list(codecs) + [RawCodec()]
+        # decode must handle EVERY known encoding regardless of the
+        # configured write stack (a fresh manager reads old images)
+        self._decoders: Dict[str, ImageCodec] = {}
+        for codec in [*self.codecs, QuantizeCodec(), DeltaCodec()]:
+            self._decoders.setdefault(codec.name, codec)
         os.makedirs(directory, exist_ok=True)
         # crash recovery for the re-checkpoint retire dance (_write): a
         # kill between retiring the old image and committing the new
@@ -155,34 +230,24 @@ class CheckpointManager:
         prev_step = self.latest_step()
         delta_ok = (prev_step is not None
                     and self._since_full < self.full_every - 1)
+        ctx = _EncodeCtx(self, prev_step if delta_ok else None)
         for path, arr in flat.items():
             arr = np.asarray(arr)
+            for codec in self.codecs:
+                encoded = codec.encode(path, arr, ctx)
+                if encoded is not None:
+                    break
+            encoding, payloads, meta = encoded
             entry: Dict[str, Any] = {
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
                 "logical": logical_flat.get(path),
-                "encoding": "raw",
+                "encoding": encoding,
+                **meta,
             }
-            payloads: List[bytes] = []
-            if path in self.quantize_keys or any(
-                    path.startswith(k) for k in self.quantize_keys):
-                q, s, pad = quant_ref.quantize_np(arr)
-                entry["encoding"] = "int8_block"
-                entry["pad"] = pad
-                payloads = [q.tobytes(), s.tobytes()]
-            elif delta_ok and any(
-                    path.startswith(k) for k in self.delta_keys):
-                prev = self._read_array(self.step_dir(prev_step), path)
-                if prev is not None and prev.shape == arr.shape \
-                        and prev.dtype == arr.dtype:
-                    entry["encoding"] = "xor_delta"
-                    entry["base_step"] = prev_step
-                    payloads = [delta_ref.delta_np(arr, prev).tobytes()]
-            if not payloads:
-                entry["encoding"] = "raw" if entry["encoding"] != "int8_block" \
-                    else entry["encoding"]
-                if entry["encoding"] == "raw":
-                    payloads = [arr.tobytes()]
+            if self.compress:
+                entry["compressed"] = True
+                payloads = [zlib.compress(p, 1) for p in payloads]
             files = []
             for pi, payload in enumerate(payloads):
                 chunks = [payload[o:o + CHUNK_BYTES]
@@ -193,8 +258,8 @@ class CheckpointManager:
                         f.write(chunk)
                     files.append({"file": fname, "part": pi,
                                   "nbytes": len(chunk),
-                                  "checksum": checksum_np(
-                                      np.frombuffer(chunk, np.uint8))})
+                                  "checksum": shard_digest(
+                                      chunk, self.use_pallas)})
                     total += len(chunk)
             entry["files"] = files
             arrays[path] = entry
@@ -266,15 +331,22 @@ class CheckpointManager:
             with open(os.path.join(d, fmeta["file"]), "rb") as f:
                 chunk = f.read()
             if self.verify:
-                got = checksum_np(np.frombuffer(chunk, np.uint8))
+                got = shard_digest(chunk, self.use_pallas)
                 if got != fmeta["checksum"]:
-                    raise CheckpointError(
+                    raise ImageIntegrityError(
                         f"checksum mismatch in {fmeta['file']}: "
                         f"{got} != {fmeta['checksum']}")
             buf += chunk
+        if entry.get("compressed"):
+            buf = zlib.decompress(buf)
         return buf
 
-    def _read_array(self, d: str, path: str) -> Optional[np.ndarray]:
+    def _read_array(self, d: str, path: str, *,
+                    _depth: int = 0) -> Optional[np.ndarray]:
+        if _depth > self.max_chain:
+            raise DeltaChainError(
+                f"{path}: delta chain longer than the max_chain bound "
+                f"({self.max_chain})")
         try:
             man = self._manifest(d)
         except FileNotFoundError:
@@ -282,24 +354,12 @@ class CheckpointManager:
         entry = man["arrays"].get(path)
         if entry is None:
             return None
-        shape = tuple(entry["shape"])
-        dtype = np.dtype(entry["dtype"])
-        if entry["encoding"] == "raw":
-            raw = self._read_payload(d, entry, 0)
-            return np.frombuffer(raw, dtype).reshape(shape).copy()
-        if entry["encoding"] == "int8_block":
-            q = np.frombuffer(self._read_payload(d, entry, 0), np.int8)
-            s = np.frombuffer(self._read_payload(d, entry, 1), np.float32)
-            q = q.reshape(-1, quant_ref.QBLOCK)
-            return quant_ref.dequantize_np(q, s.reshape(-1, 1),
-                                           entry["pad"], shape, dtype)
-        if entry["encoding"] == "xor_delta":
-            base = self._read_array(self.step_dir(entry["base_step"]), path)
-            if base is None:
-                raise CheckpointError(f"missing delta base for {path}")
-            dl = np.frombuffer(self._read_payload(d, entry, 0), np.uint8)
-            return delta_ref.apply_np(base, dl, shape, dtype)
-        raise CheckpointError(f"unknown encoding {entry['encoding']}")
+        codec = self._decoders.get(entry["encoding"])
+        if codec is None:
+            raise CheckpointError(f"unknown encoding {entry['encoding']}")
+        n_parts = 1 + max((f["part"] for f in entry["files"]), default=0)
+        parts = [self._read_payload(d, entry, pi) for pi in range(n_parts)]
+        return codec.decode(parts, entry, _DecodeCtx(self, path, _depth))
 
     def restore(self, step: Optional[int] = None, *, mesh=None, specs=None,
                 skeleton=None) -> Tuple[Any, Dict]:

@@ -61,11 +61,81 @@ import traceback
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.comm.transport.base import TAG_CTRL, TAG_INTENT, Endpoint
+from repro.core.codec import BASE_EPOCH_KEY
 from repro.core.coordinator import CheckpointAborted, Coordinator
 
+# ---------------------------------------------------------------------------
+# the op registry — the normative table of the coordinator wire protocol.
+# docs/PROTOCOL.md renders this table and a drift-guard test
+# (tests/test_docs.py) diffs the doc against THIS dict, so adding an op
+# without documenting it fails CI.  "blocking" ops get exactly one reply
+# frame; fire-and-forget ops rely on per-(src, tag) FIFO ordering.
+# ---------------------------------------------------------------------------
+CTRL_OPS: Dict[str, Dict[str, object]] = {
+    "request_ckpt": dict(
+        dir="rank->coord", blocking=True,
+        doc="bump the checkpoint epoch; intent is pushed to every rank"),
+    "register_comm": dict(
+        dir="rank->coord", blocking=False,
+        doc="announce a communicator (gid, member ranks) for SIII-K "
+            "count-equalization"),
+    "enter": dict(
+        dir="rank->coord", blocking=False,
+        doc="collective-enter count report (only while a checkpoint is "
+            "pending)"),
+    "exit": dict(
+        dir="rank->coord", blocking=False,
+        doc="collective-exit count report (only while a checkpoint is "
+            "pending)"),
+    "park": dict(
+        dir="rank->coord", blocking=True,
+        doc="phase-1 park at a safe point; reply carries the verdict "
+            "(safe/continue/abort) + newest closed epoch"),
+    "committed": dict(
+        dir="rank->coord", blocking=False,
+        doc="phase-2 report: snapshot staged at the cut (sync mode: "
+            "snapshot fully written)"),
+    "writer_ack": dict(
+        dir="rank->coord", blocking=False,
+        doc="async pipeline: the rank's BACKGROUND writer confirms its "
+            "snapshot blob is durably at the launcher (ok=False aborts "
+            "the epoch); the commit round completes only when every "
+            "live rank has acked"),
+    "wait_all_committed": dict(
+        dir="rank->coord", blocking=True,
+        doc="sync mode: block until every live rank reported committed "
+            "(completes the epoch)"),
+    "wait_released": dict(
+        dir="rank->coord", blocking=True,
+        doc="block until the epoch's commit round completes; reply "
+            "says whether it committed"),
+    "straggler_report": dict(
+        dir="rank->coord", blocking=True,
+        doc="SIII-J introspection: ranks not yet at a safe point"),
+    "mark_dead": dict(
+        dir="rank->coord", blocking=False,
+        doc="voluntary departure; a phase-1 closure event (SIII-J)"),
+    "hb": dict(
+        dir="rank->coord", blocking=False,
+        doc="liveness heartbeat; silence beyond the timeout declares "
+            "the rank failed"),
+    "bye": dict(
+        dir="rank->coord", blocking=False,
+        doc="clean-exit goodbye: the upcoming EOF is a departure, not "
+            "a crash"),
+    "snap": dict(
+        dir="rank->coord", blocking=False,
+        doc="checkpoint snapshot blob for the launcher-side image "
+            "collector (delta blobs carry ckpt_base_epoch for chain GC)"),
+    "eof": dict(
+        dir="transport->coord", blocking=False,
+        doc="synthesized when a rank's connection closes; goodbye-less "
+            "EOF = crash -> fail_rank"),
+}
+
 # ops whose coordinator method blocks; served by a worker thread each
-_BLOCKING_OPS = ("park", "wait_all_committed", "wait_released",
-                 "request_ckpt", "straggler_report")
+_BLOCKING_OPS = tuple(op for op, meta in CTRL_OPS.items()
+                      if meta["blocking"])
 # extra slack on the client's reply wait beyond the server-side timeout:
 # the server always answers (success, verdict, or aborted-error) within
 # its own deadline, so a client-side TimeoutError means the server died
@@ -188,31 +258,88 @@ class CoordinatorServer:
                     self.notify_eof(rank)
 
     # ---- checkpoint image collection ---------------------------------------
+    @staticmethod
+    def _blob_base(blob) -> Optional[int]:
+        """Delta-chain link of a shipped blob, if it advertises one
+        (the `repro.core.codec` incremental-snapshot convention)."""
+        if isinstance(blob, dict) and blob.get(BASE_EPOCH_KEY) is not None:
+            return int(blob[BASE_EPOCH_KEY])
+        return None
+
     def _prune_snaps(self) -> None:
-        """Drop snapshot sets superseded by a newer committed image —
-        only the newest restartable epoch is ever restarted from, and
-        a long-running job checkpointing every few steps must not
-        accumulate per-epoch rank snapshots in launcher memory
-        forever.  Caller holds `_snap_lock`."""
+        """Chain-aware snapshot GC: drop epochs superseded by a newer
+        committed image — EXCEPT the transitive delta-base chain of
+        every retained epoch (an incremental blob is useless without
+        its bases), so launcher memory stays bounded by the chain
+        policy instead of growing with job length.  Caller holds
+        `_snap_lock`."""
         done = self.coord.done_epoch
+        # restartable = full snapshot set AND resolvable delta chains;
+        # an epoch whose chain broke (aborted base) must not become the
+        # GC horizon, or it would delete the older image committed_image
+        # falls back to
         committed = [e for e, s in self._snaps.items()
-                     if e <= done and len(s) == self.n_ranks]
-        if committed:
-            newest = max(committed)
-            for e in [e for e in self._snaps if e < newest]:
-                del self._snaps[e]
+                     if e <= done and len(s) == self.n_ranks
+                     and self._chains_for(e, s) is not None]
+        if not committed:
+            return
+        newest = max(committed)
+        keep = {e for e in self._snaps if e >= newest}
+        frontier = list(keep)
+        while frontier:
+            for blob in self._snaps.get(frontier.pop(), {}).values():
+                base = self._blob_base(blob)
+                if base is not None and base not in keep:
+                    keep.add(base)
+                    frontier.append(base)
+        for e in [e for e in self._snaps if e not in keep]:
+            del self._snaps[e]
+
+    def _chains_for(self, epoch: int, snaps: Dict[int, Dict],
+                    ) -> Optional[Dict]:
+        """Per-rank base-chain blobs ({rank: {base_epoch: blob}}) for an
+        image at `epoch` — restore walks these to reconstruct arrays
+        from base+deltas.  Empty for full (non-incremental) blobs.
+
+        Returns None when some rank's chain cannot be fully resolved —
+        e.g. a delta whose base epoch was ABORTED before that rank's
+        blob arrived (writer NACK, crash mid-upload).  An epoch with a
+        broken chain is NOT restartable no matter what the commit round
+        says, so `committed_image` must fall back to an older epoch
+        rather than hand the supervisor an image that raises
+        `DeltaChainError` at restore.  Caller holds `_snap_lock`."""
+        chains: Dict[int, Dict[int, Dict]] = {}
+        for rank, blob in snaps.items():
+            links: Dict[int, Dict] = {}
+            base = self._blob_base(blob)
+            while base is not None and base not in links:
+                ancestor = self._snaps.get(base, {}).get(rank)
+                if ancestor is None:
+                    return None  # broken chain: epoch not restartable
+                links[base] = ancestor
+                base = self._blob_base(ancestor)
+            if links:
+                chains[rank] = links
+        return chains
 
     def committed_image(self) -> Optional[Dict]:
         """Newest checkpoint image that is restartable: every rank's
-        snapshot arrived AND the coordinator completed the epoch's
-        commit round.  None if no epoch qualifies (yet)."""
+        snapshot arrived, the coordinator completed the epoch's commit
+        round (in the async pipeline that includes every rank's writer
+        ack), AND every delta chain resolves inside the collector.
+        Incremental images carry their per-rank delta base chains under
+        "chains".  None if no epoch qualifies (yet)."""
         done = self.coord.done_epoch
         with self._snap_lock:
             for epoch in sorted(self._snaps, reverse=True):
                 snaps = self._snaps[epoch]
-                if epoch <= done and len(snaps) == self.n_ranks:
-                    return {"epoch": epoch, "n_ranks": self.n_ranks,
-                            "ranks": dict(snaps)}
+                if epoch > done or len(snaps) != self.n_ranks:
+                    continue
+                chains = self._chains_for(epoch, snaps)
+                if chains is None:
+                    continue  # broken base chain: try an older epoch
+                return {"epoch": epoch, "n_ranks": self.n_ranks,
+                        "ranks": dict(snaps), "chains": chains}
         return None
 
     # ---- serve loop --------------------------------------------------------
@@ -224,23 +351,39 @@ class CoordinatorServer:
                 msg = self.ep.recv(None, TAG_CTRL, timeout=0.5)
             except TimeoutError:
                 continue
-            # the serve loop must survive any malformed request — a
-            # dead control plane turns into n ranks hanging on reply
-            # timeouts with no hint of the real error
+            except Exception:  # noqa: BLE001 — endpoint torn down
+                return
+            self._dispatch(msg)
+        # drain: frames already queued when stop() landed must still be
+        # processed — the async pipeline's final snap/writer_ack are
+        # fire-and-forget, and dropping them here would lose the last
+        # epoch's finalize (sync mode never raced this: its blocking
+        # round trips forced processing before ranks exited)
+        while True:
             try:
-                req = pickle.loads(msg.payload)
-            except Exception:  # noqa: BLE001
-                traceback.print_exc()
-                continue
-            if req.get("op") in _BLOCKING_OPS:
-                # one short-lived worker per blocking request.  Clients
-                # are synchronous (at most ONE blocking request in
-                # flight per rank), so concurrency is bounded by
-                # n_ranks; only creation churn scales with park retries
-                threading.Thread(target=self._handle, daemon=True,
-                                 args=(msg.src, req)).start()
-            else:
-                self._handle(msg.src, req)
+                msg = self.ep.recv(None, TAG_CTRL, timeout=0)
+            except Exception:  # noqa: BLE001 — empty or torn down
+                return
+            self._dispatch(msg)
+
+    def _dispatch(self, msg) -> None:
+        # the serve loop must survive any malformed request — a
+        # dead control plane turns into n ranks hanging on reply
+        # timeouts with no hint of the real error
+        try:
+            req = pickle.loads(msg.payload)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            return
+        if req.get("op") in _BLOCKING_OPS:
+            # one short-lived worker per blocking request.  Clients
+            # are synchronous (at most ONE blocking request in
+            # flight per rank), so concurrency is bounded by
+            # n_ranks; only creation churn scales with park retries
+            threading.Thread(target=self._handle, daemon=True,
+                             args=(msg.src, req)).start()
+        else:
+            self._handle(msg.src, req)
 
     def _reply(self, dst: int, rep: Dict) -> None:
         self.ep.send(dst, pickle.dumps(rep), TAG_CTRL)
@@ -261,7 +404,10 @@ class CoordinatorServer:
             elif op == "exit":
                 c.collective_exit(req["rank"], req["gid"], req["count"])
             elif op == "committed":
-                c.report_committed(req["rank"])
+                c.report_committed(req["rank"], req.get("epoch"))
+            elif op == "writer_ack":
+                c.writer_ack(req["rank"], req["epoch"],
+                             ok=req.get("ok", True), err=req.get("err"))
             elif op == "mark_dead":
                 c.mark_dead(req["rank"])
             elif op == "hb":
@@ -385,8 +531,18 @@ class CoordinatorClient:
         self._last_closed = max(self._last_closed, rep["last_closed"])
         return rep["verdict"]
 
-    def report_committed(self, rank: int) -> None:
-        self._send({"op": "committed", "rank": rank})
+    def report_committed(self, rank: int, epoch: Optional[int] = None) -> None:
+        self._send({"op": "committed", "rank": rank, "epoch": epoch})
+
+    def writer_ack(self, rank: int, epoch: int, ok: bool = True,
+                   err: Optional[str] = None) -> None:
+        """Async pipeline: this rank's background writer confirms (or,
+        with ok=False, renounces) durability of its epoch snapshot.
+        Fire-and-forget, sent AFTER the writer's `snap` upload on the
+        same endpoint, so per-(src, tag) FIFO guarantees the server
+        holds the blob before the ack gates the commit."""
+        self._send({"op": "writer_ack", "rank": rank, "epoch": epoch,
+                    "ok": ok, "err": err})
 
     def wait_all_committed(self, epoch: int, timeout: float = 120.0) -> None:
         self._call({"op": "wait_all_committed", "epoch": epoch,

@@ -89,6 +89,15 @@ class Coordinator:
         self.parked_epoch: Dict[int, int] = {}
         self.park_verdict: Dict[int, str] = {}
         self._commit_count = 0
+        # async pipeline bookkeeping, PER EPOCH (the shared
+        # _commit_count belongs to one sync commit round at a time, but
+        # an async epoch can still be waiting on writer acks while the
+        # next epoch's round begins): ranks that staged at the cut
+        # (report_committed with an epoch) and ranks whose background
+        # writer acked the image as durable — the commit completes only
+        # when every live rank has done BOTH
+        self.staged: Dict[int, set] = {}
+        self.writer_acked: Dict[int, set] = {}
         self.failed_ranks: List[int] = []
         self.stats = {"checkpoints": 0, "aborts": 0, "control_messages": 0,
                       "continues_issued": 0, "watchdog_withdrawals": 0,
@@ -153,6 +162,13 @@ class Coordinator:
             self.rank_state[rank] = self.DEAD
             if self.intent_epoch > self.done_epoch:
                 self._try_close(self.intent_epoch)
+            # a departure shrinks the live set, so an async commit
+            # round that was only waiting on THIS rank's stage/ack can
+            # complete now — writer_ack is the only other finalize
+            # site, and the departed rank's ack will never come
+            for e in sorted(set(self.staged) | set(self.writer_acked)):
+                if e > self.done_epoch and e not in self.aborted_epochs:
+                    self._try_finalize(e)
             self._cv.notify_all()
 
     def fail_rank(self, rank: int) -> bool:
@@ -298,11 +314,19 @@ class Coordinator:
                 self.park_verdict.pop(rank, None)
 
     # ---- phase 2: commit -------------------------------------------------------
-    def report_committed(self, rank: int) -> None:
+    def report_committed(self, rank: int, epoch: Optional[int] = None) -> None:
+        """Phase-2 report.  Sync mode: the snapshot is fully written
+        (no epoch needed — one commit round is in flight at a time).
+        Async mode: the snapshot is STAGED at the cut for `epoch`;
+        durability arrives later via `writer_ack`, and both are tracked
+        per epoch because a staged epoch can still be in flight when
+        the next round begins."""
         with self._cv:
             self.rank_state[rank] = self.COMMITTED
             self._commit_count += 1
             self.stats["control_messages"] += 1
+            if epoch is not None:
+                self.staged.setdefault(epoch, set()).add(rank)
             self._cv.notify_all()
 
     def wait_all_committed(self, epoch: int, timeout: float = 120.0) -> None:
@@ -329,6 +353,60 @@ class Coordinator:
             self.stats["checkpoints"] += 1
             for r in self._live():
                 self.rank_state[r] = self.RUNNING
+            self._cv.notify_all()
+
+    def writer_ack(self, rank: int, epoch: int, ok: bool = True,
+                   err: Optional[str] = None) -> None:
+        """Async phase 2 (the 2PC split): `rank`'s BACKGROUND writer
+        reports that the epoch's snapshot blob is durably at the
+        launcher (ok=True) or that producing it failed (ok=False).
+
+        In the async pipeline ranks resume compute right after staging
+        (their `report_committed` means "staged at the cut", not
+        "written"), so the commit round completes HERE — gating
+        `done_epoch` on every live rank's writer ack preserves the
+        committed-image invariant: an epoch the supervisor may restart
+        from has every rank's blob at the launcher.  A failed writer
+        aborts the epoch (the image can never be complete), exactly
+        like a phase-2 timeout would.
+        """
+        with self._cv:
+            self.stats["control_messages"] += 1
+            if epoch <= self.done_epoch or epoch in self.aborted_epochs:
+                return
+            if not ok:
+                self.aborted_epochs.add(epoch)
+                self.stats["aborts"] += 1
+                # un-wedge the world: staged ranks are compute-running
+                # already but still COMMITTED here, which would block
+                # the next phase-1 closure forever
+                for r in self._live():
+                    if self.rank_state[r] == self.COMMITTED:
+                        self.rank_state[r] = self.RUNNING
+                self._cv.notify_all()
+                return
+            self.writer_acked.setdefault(epoch, set()).add(rank)
+            self._try_finalize(epoch)
+
+    def _try_finalize(self, epoch: int) -> None:
+        """Complete an async commit round: every live rank staged at the
+        cut AND every live rank's writer acked durability.  Caller holds
+        the lock."""
+        live = self._live()
+        staged = self.staged.get(epoch, set())
+        acked = self.writer_acked.get(epoch, set())
+        if (live and epoch in self.phase1_closed
+                and all(r in staged for r in live)
+                and all(r in acked for r in live)):
+            self.done_epoch = max(self.done_epoch, epoch)
+            self.stats["checkpoints"] += 1
+            for r in live:
+                if self.rank_state[r] == self.COMMITTED:
+                    self.rank_state[r] = self.RUNNING
+            for e in [e for e in self.writer_acked if e <= epoch]:
+                del self.writer_acked[e]
+            for e in [e for e in self.staged if e <= epoch]:
+                del self.staged[e]
             self._cv.notify_all()
 
     def wait_released(self, epoch: int, timeout: float = 120.0) -> bool:

@@ -36,6 +36,41 @@ from repro.training.step import abstract_params, init_train_state
 
 
 class MANARuntime:
+    """Checkpointed training runtime: the paper's machinery fronting a
+    real jax training job.
+
+    The training loop (`run`) only sees pure (state, batch) -> state
+    functions; the 2PC agent interposes at step boundaries (safe
+    points), the `CheckpointManager` writes sharded, digest-verified
+    images (with the codec stack: int8 moments via `quantize_moments`,
+    XOR-delta params via `delta_params`), and `restore` performs the
+    elastic restart — any mesh, any transport.
+
+    Construction wires a single-rank world with a WIRE coordinator (the
+    same protocol a thousand-rank socket job uses):
+
+    >>> import tempfile
+    >>> from repro.configs import ARCHS, reduced_config
+    >>> from repro.configs.base import RunConfig, ShapeConfig
+    >>> cfg = reduced_config(ARCHS["qwen2-0.5b"])
+    >>> rc = RunConfig(model=cfg, shape=ShapeConfig("doc", 64, 2, "train"))
+    >>> rt = MANARuntime(cfg, rc, ckpt_dir=tempfile.mkdtemp(),
+    ...                  ckpt_every_steps=2)
+    >>> rt.ckpt.steps()          # fresh directory: nothing committed yet
+    []
+    >>> rt.close()
+
+    A typical session then runs `rt.initialize()` (or `rt.restore()`),
+    `rt.run(n)` — checkpoints land at the configured cadence, on
+    SIGUSR1, or at an explicit `request_checkpoint()` — and resumes
+    bit-identically from the written images (tests/test_runtime_resume).
+
+    With `async_ckpt=True` the agent runs the asynchronous 2PC split:
+    the safe point stages the snapshot and training resumes immediately
+    while the background writer completes serialization and the
+    coordinator finalizes the epoch on writer-ack.
+    """
+
     def __init__(self, cfg: ModelConfig, rc: RunConfig, *, ckpt_dir: str,
                  mesh=None, mode: str = "hybrid",
                  ckpt_every_steps: Optional[int] = None,
@@ -43,7 +78,8 @@ class MANARuntime:
                  keep: int = 3, quantize_moments: bool = False,
                  delta_params: bool = False, seed: int = 0,
                  install_signal_handler: bool = False,
-                 transport: str = "inproc", fault_plan=None):
+                 transport: str = "inproc", fault_plan=None,
+                 async_ckpt: bool = False, use_pallas: bool = False):
         self.cfg, self.rc = cfg, rc
         self.seed = seed
         # lower half: rebuilt at restart — including the comm world, so
@@ -58,7 +94,8 @@ class MANARuntime:
         self.ckpt = CheckpointManager(
             ckpt_dir, keep=keep,
             quantize_keys=("opt/m", "opt/v") if quantize_moments else (),
-            delta_keys=("params",) if delta_params else ())
+            delta_keys=("params",) if delta_params else (),
+            use_pallas=use_pallas)
         # protocol plane (1 real rank; protocol is rank-agnostic).  The
         # coordinator is an ENDPOINT on the fabric, not a shared object:
         # the runtime talks to it through the same wire protocol a
@@ -67,7 +104,8 @@ class MANARuntime:
         self.coord_server, clients = make_control_plane(self.fabric)
         self.coord = clients[0]
         self.agent = RankAgent(0, self.fabric.endpoints[0], self.coord,
-                               [0], mode=mode, transport=transport)
+                               [0], mode=mode, transport=transport,
+                               async_commit=async_ckpt)
         # server thread + sockets die with the runtime even if close()
         # is never called (tests churn through many runtimes)
         self._finalizer = weakref.finalize(
@@ -190,5 +228,6 @@ class MANARuntime:
             self._maybe_trigger(step + 1)
             if self.agent.safe_point(self._snapshot):
                 self._last_ckpt_time = time.monotonic()
+        self.agent.drain_writer()  # async mode: writer acks owed first
         self.ckpt.wait()
         return self.history

@@ -44,7 +44,8 @@ class RankAgent:
     def __init__(self, rank: int, ep: Endpoint, coordinator: Coordinator,
                  world: Sequence[int], mode: str = "hybrid",
                  coll_algo: Optional[str] = None,
-                 transport: str = "inproc"):
+                 transport: str = "inproc", async_commit: bool = False,
+                 writer=None):
         assert mode in ("mana1", "nobarrier", "hybrid")
         self.rank = rank
         self.ep = ep
@@ -59,8 +60,22 @@ class RankAgent:
         # collective algorithm ("tree" | "linear"; None = module default)
         # — must agree across all ranks of a job
         self.coll_algo = coll_algo
+        # asynchronous 2PC split: stage the snapshot at the cut, resume
+        # compute immediately, and let a background writer
+        # (repro.core.snapshot_writer) do serialization + upload; the
+        # coordinator's commit is gated on the writer's ack
+        self.async_commit = async_commit
+        self._writer = writer
         self.done_epoch = 0
         self.ckpt_epoch = 0  # adopted epoch of the snapshot in progress
+        # post-closure compute stall of the LAST checkpoint taken at
+        # this rank: seconds from the "safe" park verdict (the drain
+        # barrier) back to compute — drain + snapshot/stage + (sync:
+        # ship + commit round trips | async: writer submit).  This is
+        # the §III quantity the async split shrinks, and what the
+        # ckpt_stall benchmark records; park/alignment time is excluded
+        # (workload skew, not protocol cost).
+        self.last_commit_stall_s = 0.0
         # upper-half tables (serialized into every checkpoint)
         self.comms = VirtualCommTable()
         self.requests = VirtualRequestTable()
@@ -71,7 +86,8 @@ class RankAgent:
         # DMTCP_PLUGIN_DISABLE_CKPT analogue: cheap depth counter, no lock
         self.in_lower_half = 0
         self.stats = {"collectives": 0, "barriers_inserted": 0,
-                      "coordinator_reports": 0, "continues": 0}
+                      "coordinator_reports": 0, "continues": 0,
+                      "async_stages": 0}
 
     # ---- interposition helpers ------------------------------------------------
     def _ckpt_pending(self) -> bool:
@@ -157,6 +173,37 @@ class RankAgent:
     def alltoall(self, vcomm: int, rows) -> Any:
         return self.collective(vcomm, coll.alltoall, rows)
 
+    # ---- the async 2PC split (background writer plumbing) ---------------------------
+    def _ensure_writer(self):
+        if self._writer is None:
+            from repro.core.snapshot_writer import make_snapshot_writer
+            self._writer = make_snapshot_writer(self.transport)
+        return self._writer
+
+    def _writer_done(self, epoch: int, ok: bool, payload) -> None:
+        """Runs on the background writer's collector thread once the
+        staged snapshot has been produced: ship the blob to the
+        launcher-side image collector, then ack (snap before ack on the
+        same endpoint = FIFO guarantees the server holds the blob
+        before the ack gates the commit).  A produce failure becomes a
+        NACK, which aborts the epoch instead of wedging the world."""
+        if ok and payload is not None and hasattr(self.coord,
+                                                  "ship_snapshot"):
+            try:
+                self.coord.ship_snapshot(epoch, payload)
+            except Exception:  # noqa: BLE001 — upload failed: NACK
+                ok, payload = False, "snap upload failed"
+        self.coord.writer_ack(self.rank, epoch, ok=ok,
+                              err=None if ok else str(payload))
+
+    def drain_writer(self, timeout: float = 30.0) -> None:
+        """Block until every in-flight background snapshot has shipped
+        and acked.  Called by the harness before the clean-exit goodbye
+        — a rank must not disappear while its writer still owes the
+        coordinator an ack."""
+        if self._writer is not None:
+            self._writer.close(timeout)
+
     # ---- the safe point (step boundary) ---------------------------------------------
     def safe_point(self, snapshot: Callable[[], None],
                    timeout: float = 60.0) -> bool:
@@ -166,6 +213,19 @@ class RankAgent:
         count-equalization rule (phase 1); once closed, drain p2p
         (§III-B), snapshot, and commit (phase 2).  Returns True iff a
         checkpoint was taken at THIS boundary.
+
+        Synchronous mode (default): `snapshot()` does all its work at
+        the cut, and the rank waits out the commit/release round trips
+        — the paper-faithful baseline.
+
+        Async mode (`async_commit=True`): `snapshot()` only STAGES —
+        capture the cut's values cheaply and return either None
+        (nothing to upload / already handled) or a zero-arg callable
+        that produces the JSON-safe blob to ship.  The rank resumes
+        compute immediately; serialization, delta-encoding and the
+        `snap` upload run on the background writer, and the
+        coordinator finalizes the epoch only after every rank's writer
+        ack (`Coordinator.writer_ack`).
         """
         if not self._ckpt_pending():
             return False
@@ -190,6 +250,7 @@ class RankAgent:
         # mid-phase-1, ranks parked under different epoch numbers all
         # completed the SAME physical cut, and phase 2 must agree on one
         # epoch or commit/release bookkeeping misaligns
+        stall_t0 = time.monotonic()
         epoch = max(epoch, self.coord.last_closed_epoch)
         world = self.comm_ranks(self.world_comm)
         drain_rank(self.ep, world, gid=comm_gid(world), timeout=timeout,
@@ -199,6 +260,20 @@ class RankAgent:
         # callbacks that ship their blob to the launcher-side image
         # collector (CoordinatorClient.ship_snapshot) read it here
         self.ckpt_epoch = epoch
+        if self.async_commit:
+            # the 2PC split: stage at the cut, hand the expensive tail
+            # to the background writer, resume compute NOW.  `committed`
+            # here means "staged"; the epoch finalizes at writer-ack.
+            staged = snapshot()
+            self.coord.report_committed(self.rank, epoch)
+            self.stats["async_stages"] += 1
+            produce = staged if callable(staged) else (lambda: None)
+            self._ensure_writer().submit(
+                epoch, produce,
+                lambda e, okk, payload: self._writer_done(e, okk, payload))
+            self.done_epoch = epoch
+            self.last_commit_stall_s = time.monotonic() - stall_t0
+            return True
         try:
             snapshot()
             self.coord.report_committed(self.rank)
@@ -208,6 +283,7 @@ class RankAgent:
         except CheckpointAborted:
             ok = False
         self.done_epoch = epoch
+        self.last_commit_stall_s = time.monotonic() - stall_t0
         return ok
 
     # ---- serialization (upper half) -----------------------------------------------

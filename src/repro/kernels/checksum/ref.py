@@ -9,18 +9,23 @@ blockwise so the Pallas kernel and this oracle agree bit-exactly:
       c = XOR-combine of s1_b*(b+1) and (s2_b*(b+1)^2) << 1
 
 All arithmetic is uint32 with natural mod-2^32 wraparound (no x64 dep).
+
+jax imports are deferred into the jnp functions: `checksum_np` is the
+host write/restore path and must stay importable from a jax-free
+process (socket rank processes fork per checkpoint; a jax-sized address
+space would make that fork cost more than the checkpoint).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 BLOCK = 2048  # uint32 words per block
 
 
-def to_words(data: jnp.ndarray) -> jnp.ndarray:
+def to_words(data):
     """Any array -> (n_blocks, BLOCK) uint32 word blocks (zero padded)."""
+    import jax
+    import jax.numpy as jnp
     raw = jnp.ravel(data)
     if raw.dtype == jnp.uint8:
         raw8 = raw
@@ -33,16 +38,18 @@ def to_words(data: jnp.ndarray) -> jnp.ndarray:
     return words.reshape(-1, BLOCK)
 
 
-def block_sums_ref(words: jnp.ndarray) -> jnp.ndarray:
+def block_sums_ref(words):
     """(n_blocks, BLOCK) uint32 -> (n_blocks, 2) uint32 partial sums."""
+    import jax.numpy as jnp
     idx = jnp.arange(words.shape[-1], dtype=jnp.uint32)
     s1 = jnp.sum(words, axis=-1, dtype=jnp.uint32)
     s2 = jnp.sum(words * idx, axis=-1, dtype=jnp.uint32)
     return jnp.stack([s1, s2], axis=-1)
 
 
-def fold(sums: jnp.ndarray) -> jnp.ndarray:
+def fold(sums):
     """(n_blocks, 2) uint32 -> scalar uint32 checksum."""
+    import jax.numpy as jnp
     n = sums.shape[0]
     pos = jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(1)
     f1 = jnp.sum(sums[:, 0] * pos, dtype=jnp.uint32)
@@ -50,7 +57,7 @@ def fold(sums: jnp.ndarray) -> jnp.ndarray:
     return f1 ^ (f2 << jnp.uint32(1))
 
 
-def checksum_ref(data: jnp.ndarray) -> jnp.ndarray:
+def checksum_ref(data):
     return fold(block_sums_ref(to_words(data)))
 
 

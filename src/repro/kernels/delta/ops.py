@@ -1,10 +1,12 @@
-"""jit'd wrapper for XOR delta encode/apply."""
+"""jit'd wrapper for XOR delta encode/apply + the HOST entry point the
+incremental checkpoint pipeline calls per shard."""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.delta import ref
 from repro.kernels.delta.delta import xor_pallas
@@ -17,3 +19,28 @@ def delta(cur: jnp.ndarray, prev: jnp.ndarray, use_kernel: bool = True,
     if use_kernel:
         return xor_pallas(a, b, interpret=interpret)
     return a ^ b
+
+
+def delta_host(cur: np.ndarray, prev: np.ndarray,
+               use_pallas: bool = False) -> np.ndarray:
+    """XOR byte delta of two equal-shaped host arrays -> uint8[nbytes].
+
+    With use_pallas the XOR runs through the Pallas word-tile kernel
+    (the padded uint32 word stream is unpacked little-endian and
+    trimmed back to the array's byte length — bit-exact with the numpy
+    oracle); any kernel failure falls back to `ref.delta_np`.
+    """
+    if use_pallas:
+        try:
+            words = np.asarray(delta(jnp.asarray(cur), jnp.asarray(prev)))
+            raw = words.astype("<u4", copy=False).tobytes()
+            return np.frombuffer(raw[:cur.nbytes], np.uint8).copy()
+        except Exception:  # noqa: BLE001 — oracle fallback by design
+            pass
+    return ref.delta_np(cur, prev)
+
+
+def apply_host(prev: np.ndarray, delta_bytes: np.ndarray, shape,
+               dtype) -> np.ndarray:
+    """Inverse of `delta_host` (XOR is its own inverse)."""
+    return ref.apply_np(prev, delta_bytes, shape, dtype)

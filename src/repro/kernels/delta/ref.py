@@ -7,14 +7,19 @@ is exact for every dtype.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 DBLOCK = 2048  # uint32 words per tile
 
+# jax imports are deferred into the jnp functions so `delta_np` /
+# `apply_np` (the host checkpoint path) stay importable from a jax-free
+# process — socket rank processes fork per checkpoint, and a jax-sized
+# address space would dominate the fork cost.
 
-def to_words(x: jnp.ndarray) -> jnp.ndarray:
+
+def to_words(x):
+    import jax
+    import jax.numpy as jnp
     raw = jnp.ravel(x)
     raw8 = (raw if raw.dtype == jnp.uint8
             else jax.lax.bitcast_convert_type(raw, jnp.uint8).ravel())
@@ -25,7 +30,7 @@ def to_words(x: jnp.ndarray) -> jnp.ndarray:
     return w.reshape(-1, DBLOCK)
 
 
-def delta_ref(cur: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+def delta_ref(cur, prev):
     """XOR words of two equal-shaped arrays -> (n, DBLOCK) uint32."""
     return to_words(cur) ^ to_words(prev)
 

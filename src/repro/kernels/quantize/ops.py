@@ -1,10 +1,12 @@
-"""jit'd wrappers for blockwise int8 quantize/dequantize."""
+"""jit'd wrappers for blockwise int8 quantize/dequantize + the HOST
+entry point the checkpoint pipeline calls for low-precision shadows."""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.quantize import ref
 from repro.kernels.quantize.quantize import dequantize_pallas, quantize_pallas
@@ -27,3 +29,21 @@ def dequantize(q: jnp.ndarray, s: jnp.ndarray, use_kernel: bool = True,
     if use_kernel:
         return dequantize_pallas(q, s, interpret=interpret)
     return ref.dequantize_ref(q, s)
+
+
+def quantize_host(x: np.ndarray, use_pallas: bool = False):
+    """Blockwise int8 quantization on the host checkpoint path.
+
+    Returns (q int8[n, QBLOCK], scales f32[n, 1], pad).  With use_pallas
+    the blocks run through the Pallas kernel; any failure falls back to
+    the numpy oracle.
+    """
+    if use_pallas:
+        try:
+            q, s = quantize(jnp.asarray(x))
+            pad = (-int(np.asarray(x).size)) % ref.QBLOCK
+            return (np.asarray(q), np.asarray(s, np.float32).reshape(-1, 1),
+                    pad)
+        except Exception:  # noqa: BLE001 — oracle fallback by design
+            pass
+    return ref.quantize_np(x)

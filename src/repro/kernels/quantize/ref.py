@@ -7,28 +7,34 @@ only by default; params stay exact).
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 QBLOCK = 1024  # elements per quantization block
 
+# jax imports are deferred into the jnp functions so `quantize_np` /
+# `dequantize_np` (the host checkpoint path) stay importable from a
+# jax-free process (see repro.kernels.delta.ref).
 
-def pad_to_blocks(x: jnp.ndarray):
+
+def pad_to_blocks(x):
+    import jax.numpy as jnp
     flat = jnp.ravel(x).astype(jnp.float32)
     pad = (-flat.size) % QBLOCK
     flat = jnp.pad(flat, (0, pad))
     return flat.reshape(-1, QBLOCK), pad
 
 
-def quantize_ref(blocks: jnp.ndarray):
+def quantize_ref(blocks):
     """(n, QBLOCK) f32 -> ((n, QBLOCK) int8, (n, 1) f32 scales)."""
+    import jax.numpy as jnp
     amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
 
-def dequantize_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+def dequantize_ref(q, scale):
+    import jax.numpy as jnp
     return q.astype(jnp.float32) * scale
 
 

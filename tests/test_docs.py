@@ -1,0 +1,60 @@
+"""Docs drift guards as tier-1 tests (ISSUE 4 satellites).
+
+The real logic lives in docs/check_docs_drift.py (also run by the CI
+`docs` job); here each check is a parameterized test so a drift shows
+up as a named failure in the default tier, not just in CI."""
+import importlib.util
+import os
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_drift",
+        os.path.join(ROOT, "docs", "check_docs_drift.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+CHECKER = _load_checker()
+
+
+@pytest.mark.parametrize("check", CHECKER.CHECKS,
+                         ids=lambda c: c.__name__)
+def test_docs_drift(check):
+    failures = check()
+    assert not failures, "\n".join(failures)
+
+
+def test_op_registry_blocking_set_consistent():
+    """The served blocking-op tuple is derived from the registry —
+    adding a blocking op to CTRL_OPS automatically routes it to a
+    worker thread in the server."""
+    from repro.core.control import _BLOCKING_OPS, CTRL_OPS
+    assert set(_BLOCKING_OPS) == {op for op, m in CTRL_OPS.items()
+                                  if m["blocking"]}
+    # every op the registry knows must be normatively documented with
+    # a direction and a one-line doc
+    for op, meta in CTRL_OPS.items():
+        assert meta["dir"] in ("rank->coord", "transport->coord"), op
+        assert meta["doc"], op
+
+
+def test_example_epilog_is_generated():
+    """The example's --help epilog is built from the parser, so it can
+    never drift from the actual flags."""
+    import sys
+    sys.path.insert(0, os.path.join(ROOT, "examples"))
+    try:
+        import multirank_simulation as sim
+    finally:
+        sys.path.pop(0)
+    parser = sim.build_parser()
+    for action in parser._actions:
+        for opt in action.option_strings:
+            if opt.startswith("--") and opt != "--help":
+                assert opt in parser.epilog, opt

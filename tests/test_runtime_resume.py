@@ -33,6 +33,27 @@ def test_bitwise_resume(tmp_path):
     assert a == b, "resume must be bit-identical (same batches, same state)"
 
 
+def test_async_pipeline_resume(tmp_path):
+    """ISSUE 4: the async 2PC split through the real runtime — the safe
+    point stages and returns, the background writer + writer-ack
+    finalize the epoch, and the written image restores bit-identically
+    into a SYNC runtime (the file format is mode-agnostic)."""
+    cfg = reduced_config(ARCHS["qwen2-0.5b"])
+    rc = _rc(cfg)
+    rt = MANARuntime(cfg, rc, ckpt_dir=str(tmp_path), ckpt_every_steps=4,
+                     async_ckpt=True)
+    rt.initialize()
+    hist = rt.run(6)
+    assert rt.checkpoints_taken == 1
+    assert rt.ckpt.steps() == [4]
+    assert rt.agent.stats["async_stages"] == 1
+
+    rt2 = MANARuntime(cfg, rc, ckpt_dir=str(tmp_path))
+    assert rt2.restore(4) == 4
+    hist2 = rt2.run(2)
+    assert [h["loss"] for h in hist][4:6] == [h["loss"] for h in hist2]
+
+
 def test_resume_wrong_arch_rejected(tmp_path):
     cfg = reduced_config(ARCHS["qwen2-0.5b"])
     rt = MANARuntime(cfg, _rc(cfg), ckpt_dir=str(tmp_path),
