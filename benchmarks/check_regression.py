@@ -6,17 +6,31 @@ default, the PR-1 acceptance bound):
 
   * 64-rank tree barrier latency   (us_per_barrier must not grow > FACTOR)
   * 64-rank tree collective rate   (rate must not shrink > FACTOR)
+  * 64-rank ASYNC checkpoint stall (wall us must not grow > FACTOR vs
+    the committed baseline — "async ckpt_stall no worse than today")
 
 It also enforces the tentpole claims themselves, machine-relatively
 (the compared numbers come from the SAME fresh run, so host speed
 cancels out):
 
   * at 64 ranks, tree collectives/sec/process >= MIN_SPEEDUP x linear
+  * async checkpoint stall <= 0.9x sync at 64 ranks; incremental delta
+    images <= 0.5x full images (ISSUE 4)
+  * frame v2 encode throughput >= WIRE_SPEEDUP (3x) the v1 pickle path
+    (ISSUE 5: the v2 header is O(1) in the payload)
+  * binary snapshot-image bytes <= IMAGE_BYTES_FACTOR (0.7x) the
+    legacy JSON/base64 baseline (ISSUE 5: base64 inflation removed,
+    shuffle filter gains)
   * transport invariance: where the run carries records for the same
     (n, algo) point on more than one transport backend, the VIRTUAL
     per-iteration latencies must agree to within 0.1% — the occupancy
     model lives in the backend-agnostic Endpoint, so any divergence is
     a transport-semantics bug, not noise.
+
+Coverage: every guarded-name inproc record present in the BASELINE must
+also be present in the current run (matched on its identifying keys) —
+so the 512-rank collective-rate and checkpoint-pipeline arms, and the
+codec-throughput records, cannot silently drop out of the artifact.
 
 Records are matched per transport; records without a "transport" field
 (pre-transport artifacts) read as "inproc".  Only inproc records are
@@ -35,6 +49,16 @@ import sys
 
 GUARD_N = 64
 GUARD_TRANSPORT = "inproc"
+# guarded-name coverage keys: records of these names present in the
+# baseline must be present in the current run too
+_COVERED = {
+    "fig4_collective_rate": ("n", "algo"),
+    "barrier_latency": ("n", "algo"),
+    "ckpt_stall": ("n", "mode"),
+    "ckpt_image_bytes": ("n", "encoding"),
+    "wire_codec_throughput": ("codec", "payload_kb"),
+    "image_codec_throughput": ("codec", "level"),
+}
 
 
 def _load(path):
@@ -67,6 +91,12 @@ def main() -> int:
                     help="max tolerated regression vs baseline")
     ap.add_argument("--min-speedup", type=float, default=2.0,
                     help="required tree/linear rate ratio at 64 ranks")
+    ap.add_argument("--min-wire-speedup", type=float, default=3.0,
+                    help="required frame-v2/v1-pickle encode throughput "
+                         "ratio")
+    ap.add_argument("--image-bytes-factor", type=float, default=0.7,
+                    help="max binary/json_base64 snapshot-image byte "
+                         "ratio")
     args = ap.parse_args()
     base = _load(args.baseline)
     cur = _load(args.current)
@@ -136,6 +166,63 @@ def main() -> int:
                 f"incremental images not measurably smaller than full "
                 f"at {GUARD_N} ranks: delta {d_b:.0f}B vs full "
                 f"{f_b:.0f}B (required <= 0.5x)")
+
+    # "async ckpt_stall no worse than today": the async stall is
+    # wall-clock, so it gets the same FACTOR slack as the other
+    # baseline-relative wall guards
+    b_async = _match(base, name="ckpt_stall", n=GUARD_N, mode="async")
+    if b_async and stall_async:
+        b_us = b_async[0]["stall_us_per_ckpt"]
+        c_us = stall_async[0]["stall_us_per_ckpt"]
+        print(f"async ckpt stall n={GUARD_N}: baseline {b_us:.0f}us, "
+              f"current {c_us:.0f}us ({c_us / b_us:.2f}x)")
+        if c_us > args.factor * b_us:
+            failures.append(
+                f"64-rank async checkpoint stall regressed "
+                f"{c_us / b_us:.2f}x vs baseline (limit {args.factor}x): "
+                f"{b_us:.0f}us -> {c_us:.0f}us")
+
+    # ISSUE 5: frame v2 encode throughput vs the v1 pickle path — the
+    # v2 header is O(1) in the payload, so this ratio collapsing back
+    # toward 1 means someone reintroduced a payload copy on encode
+    wire_v2 = _match(cur, name="wire_codec_throughput", codec="v2")
+    wire_v1 = _match(cur, name="wire_codec_throughput", codec="v1_pickle")
+    if wire_v2 and wire_v1:
+        r = wire_v2[0]["encode_mb_s"] / wire_v1[0]["encode_mb_s"]
+        print(f"wire codec       v2/v1 encode: {r:.1f}x "
+              f"(required >= {args.min_wire_speedup}x)")
+        if r < args.min_wire_speedup:
+            failures.append(
+                f"frame v2 encode only {r:.2f}x the pickle path "
+                f"(required >= {args.min_wire_speedup}x)")
+
+    # ISSUE 5: binary snapshot containers vs the legacy JSON/base64
+    # cells, same data, same run — a pure format comparison
+    img_bin = _match(cur, name="image_codec_throughput", codec="binary")
+    img_json = _match(cur, name="image_codec_throughput",
+                      codec="json_base64")
+    if img_bin and img_json:
+        r = (img_bin[0]["bytes_per_period"]
+             / img_json[0]["bytes_per_period"])
+        print(f"image codec      binary/json bytes: {r:.3f} "
+              f"(required <= {args.image_bytes_factor})")
+        if r > args.image_bytes_factor:
+            failures.append(
+                f"binary snapshot images are {r:.3f}x the JSON/base64 "
+                f"baseline (required <= {args.image_bytes_factor}x)")
+
+    # coverage: guarded-name records in the baseline may not silently
+    # vanish from the current artifact (e.g. the 512-rank arms)
+    for gname, keys in _COVERED.items():
+        have = {tuple(r.get(k) for k in keys)
+                for r in _match(cur, name=gname)}
+        for rec in _match(base, name=gname):
+            key = tuple(rec.get(k) for k in keys)
+            if key not in have:
+                failures.append(
+                    f"coverage: baseline record {gname} "
+                    f"{dict(zip(keys, key))} is missing from the "
+                    f"current run")
 
     # transport invariance: virtual latencies agree across backends
     transports = sorted({r.get("transport", "inproc") for r in cur

@@ -6,8 +6,11 @@ Prints ``name,us_per_call,derived`` CSV (one line per measurement).
 Flags:
   --quick           smaller rank counts / fewer steps everywhere
   --smoke           protocol-only benchmark subset for CI: fig4 + barrier
-                    at {4, 8, 64} ranks and drain scaling — skips the
-                    jax-heavy fig2/fig3/kernel/roofline suites
+                    at {4, 8, 64} ranks plus the 512-rank scale arms
+                    (collective rates + checkpoint pipeline), drain
+                    scaling, and the wire/image codec throughput records
+                    — skips the jax-heavy fig2/fig3/kernel/roofline
+                    suites
   --transport T     which fabric backend(s) to benchmark: "inproc"
                     (default; the guarded baseline records), "socket"
                     (one-process-per-rank collective rates through the
@@ -61,7 +64,7 @@ def main() -> None:
         pass  # socket-only run: skip the inproc suites below
     elif smoke:
         rows += protocol_benchmarks.fig4_collective_rates(
-            ranks=(4, 8, 64), results=results)
+            ranks=(4, 8, 64, 512), results=results)
         rows += protocol_benchmarks.barrier_latency(
             ranks=(8, 64), iters=20, results=results)
         rows += protocol_benchmarks.drain_scaling(
@@ -72,6 +75,16 @@ def main() -> None:
         # bytes full vs delta at the 64-rank guard point
         rows += protocol_benchmarks.checkpoint_pipeline(
             "inproc", ranks=(64,), results=results)
+        # the 512-rank scale arm (ISSUE 5): one checkpoint round per
+        # mode, smaller shards — the records prove the pipeline closes
+        # and commits at 512 GIL-bound ranks, the guards ride on n=64
+        rows += protocol_benchmarks.checkpoint_pipeline(
+            "inproc", ranks=(512,), shard_kb=16, steps=4, every=2,
+            results=results)
+        # the ISSUE-5 codec guards: frame v2 vs pickle, binary image
+        # containers vs JSON/base64
+        rows += protocol_benchmarks.wire_codec_throughput(results=results)
+        rows += protocol_benchmarks.image_codec_throughput(results=results)
     else:
         from benchmarks import kernel_bench, roofline
 
@@ -81,7 +94,7 @@ def main() -> None:
             n=4 if quick else 8, steps=30 if quick else 60)
         rows += protocol_benchmarks.fig3_ckpt_restart()
         rows += protocol_benchmarks.fig4_collective_rates(
-            ranks=(4, 8, 16) if quick else (4, 8, 16, 64, 128, 256),
+            ranks=(4, 8, 16) if quick else (4, 8, 16, 64, 128, 256, 512),
             results=results)
         rows += protocol_benchmarks.barrier_latency(
             ranks=(8,) if quick else (8, 64), results=results)
@@ -93,6 +106,12 @@ def main() -> None:
         rows += protocol_benchmarks.checkpoint_pipeline(
             "inproc", ranks=(8,) if quick else (64, 256),
             results=results)
+        if not quick:
+            rows += protocol_benchmarks.checkpoint_pipeline(
+                "inproc", ranks=(512,), shard_kb=16, steps=4, every=2,
+                results=results)
+        rows += protocol_benchmarks.wire_codec_throughput(results=results)
+        rows += protocol_benchmarks.image_codec_throughput(results=results)
         rows += kernel_bench.kernel_throughput(mb=4 if quick else 16)
         rows += roofline.rows()
 

@@ -1,14 +1,18 @@
 #!/usr/bin/env python
 """Docs drift guards: fail when the docs and the code disagree.
 
-Three checks (each also run as a tier-1 test via tests/test_docs.py):
+Checks (each also run as a tier-1 test via tests/test_docs.py):
 
   1. PROTOCOL.md's control-op table == the op registry
      `repro.core.control.CTRL_OPS` (op names, direction, blocking kind).
-  2. README's "Example flags" table == the actual argparse surface of
+  2. PROTOCOL.md's frame-format v2 table == the normative layout
+     `repro.comm.transport.tcp.FRAME_V2_LAYOUT` (field names, sizes,
+     types), plus the wire version and the MANA_WIRE_V1 escape hatch
+     are documented.
+  3. README's "Example flags" table == the actual argparse surface of
      examples/multirank_simulation.py (and the example's generated
      epilog lists every flag).
-  3. docs/quickstart.sh's commands all appear verbatim in the README —
+  4. docs/quickstart.sh's commands all appear verbatim in the README —
      the quickstart is the README's run instructions in executable
      form, so the README cannot document commands CI never runs.
 
@@ -76,6 +80,48 @@ def check_protocol_op_table() -> list:
     return errors
 
 
+def check_frame_format_table() -> list:
+    """PROTOCOL.md frame-v2 table vs tcp.FRAME_V2_LAYOUT."""
+    from repro.comm.transport.tcp import FRAME_V2_LAYOUT, WIRE_VERSION
+    errors = []
+    text = _read("docs", "PROTOCOL.md")
+    anchor = "## Frame format v2"
+    if anchor not in text:
+        return [f"PROTOCOL.md is missing the {anchor!r} section"]
+    doc = {}
+    for cells in _md_table_rows(text, anchor):
+        m = re.match(r"`([a-z]+)`", cells[0])
+        if not m:
+            continue
+        doc[m.group(1)] = {"bytes": cells[1], "type": cells[2]}
+    layout = {name: (size, typ) for name, size, typ, _ in FRAME_V2_LAYOUT}
+    for f in sorted(set(layout) - set(doc)):
+        errors.append(f"PROTOCOL.md frame table is missing field {f!r} "
+                      f"(present in tcp.FRAME_V2_LAYOUT)")
+    for f in sorted(set(doc) - set(layout)):
+        errors.append(f"PROTOCOL.md frame table documents unknown "
+                      f"field {f!r}")
+    for f in sorted(set(doc) & set(layout)):
+        size, typ = layout[f]
+        want = "—" if size is None else str(size)
+        if doc[f]["bytes"] != want:
+            errors.append(f"PROTOCOL.md frame field {f!r} size is "
+                          f"{doc[f]['bytes']!r}, layout says {want!r}")
+        if doc[f]["type"] != typ:
+            errors.append(f"PROTOCOL.md frame field {f!r} type is "
+                          f"{doc[f]['type']!r}, layout says {typ!r}")
+    section = text[text.index(anchor):]
+    section = section[:section.index("\n## ") if "\n## " in section[4:]
+                      else len(section)]
+    if f"tcp.WIRE_VERSION = {WIRE_VERSION}" not in section:
+        errors.append("PROTOCOL.md frame section does not state the "
+                      f"current wire version ({WIRE_VERSION})")
+    if "MANA_WIRE_V1" not in section:
+        errors.append("PROTOCOL.md frame section does not document the "
+                      "MANA_WIRE_V1 escape hatch")
+    return errors
+
+
 def check_example_flags() -> list:
     """README 'Example flags' table + example epilog vs the parser."""
     import multirank_simulation as sim
@@ -129,8 +175,9 @@ def check_architecture_linked() -> list:
     return errors
 
 
-CHECKS = (check_protocol_op_table, check_example_flags,
-          check_quickstart_in_readme, check_architecture_linked)
+CHECKS = (check_protocol_op_table, check_frame_format_table,
+          check_example_flags, check_quickstart_in_readme,
+          check_architecture_linked)
 
 
 def main() -> int:

@@ -46,6 +46,7 @@ from repro.comm.transport import FaultPlan, available_transports
 from repro.comm.transport.harness import (restore_agent_from_blob,
                                           row_width, run_world,
                                           run_world_supervised)
+from repro.core.codec import DEFAULT_COMPRESS_LEVEL, SnapshotCodec
 
 STEPS_A, STEPS_B, LAG = 10, 6, 2
 CKPT_STEP_A, CKPT_STEP_B = 4, 3
@@ -80,6 +81,11 @@ def build_parser() -> argparse.ArgumentParser:
                         "compute right after staging; a background "
                         "writer ships snapshots and the commit is gated "
                         "on writer acks")
+    p.add_argument("--compress-level", type=int,
+                   default=DEFAULT_COMPRESS_LEVEL,
+                   help="zlib level for binary snapshot containers on "
+                        "the --async-ckpt path (default picked by the "
+                        "image_codec_throughput benchmark)")
     p.add_argument("--chaos", action="store_true",
                    help="supervised chaos mode: seeded rank kills + "
                         "auto-restart from the last committed image")
@@ -289,7 +295,18 @@ def phase_b(n, transport, image_path, async_ckpt=False):
 # committed image (the NERSC-production reliability scenario)
 # ---------------------------------------------------------------------------
 
-def make_chaos_worker(n, image, target, ckpt_every, async_ckpt=False):
+def snap_state(blob):
+    """A chaos snapshot's app state, whichever way it shipped: the
+    sync path sends plain JSON-safe dicts, the --async-ckpt path packs
+    the same dict into a binary snapshot container's compressed extra
+    cell (`SnapshotCodec.encode(..., extra=...)`)."""
+    if isinstance(blob, (bytes, bytearray)):
+        return SnapshotCodec().decode_extra(blob)
+    return blob
+
+
+def make_chaos_worker(n, image, target, ckpt_every, async_ckpt=False,
+                      compress_level=DEFAULT_COMPRESS_LEVEL):
     """One incarnation of the chaos training job: a pipelined ring
     (receives lag sends, so messages are ALWAYS in flight) plus per-row
     allreduces, checkpointing every `ckpt_every` steps.  Each commit
@@ -310,7 +327,7 @@ def make_chaos_worker(n, image, target, ckpt_every, async_ckpt=False):
             base = (r // row_w) * row_w
             a.row = a.create_comm(range(base, base + row_w))
         else:
-            blob = snaps[str(r)]
+            blob = snap_state(snaps[str(r)])
             restore_agent_from_blob(ctx, blob["agent"])
             a.world_comm = blob["world_comm"]
             a.row = blob["row"]
@@ -324,8 +341,11 @@ def make_chaos_worker(n, image, target, ckpt_every, async_ckpt=False):
                        "agent": a.serialize()}
             if async_ckpt:
                 # async pipeline: stage only — the background writer
-                # ships the blob and acks; compute resumes immediately
-                return lambda: payload
+                # encodes the binary container (the serialized agent,
+                # drain payloads included, deflates well) and ships it
+                epoch = a.ckpt_epoch
+                codec = SnapshotCodec(compress_level=compress_level)
+                return lambda: codec.encode(epoch, {}, extra=payload)
             ctx.coord.ship_snapshot(a.ckpt_epoch, payload)
 
         for step in range(start, target):
@@ -404,7 +424,7 @@ def chaos_main(args):
 
     def fn_factory(attempt, image):
         resume = (0 if image is None else 1 + min(
-            int(b["step"]) for b in image["ranks"].values()))
+            int(snap_state(b)["step"]) for b in image["ranks"].values()))
         resume_steps.append(resume)
         what = (f"kill rank {schedule[attempt][1]} at "
                 f"{schedule[attempt][2]}" if attempt in schedule
@@ -413,7 +433,8 @@ def chaos_main(args):
               f"(image epoch {image['epoch'] if image else None}), "
               f"{what}")
         return make_chaos_worker(n, image, target, every,
-                                 async_ckpt=args.async_ckpt)
+                                 async_ckpt=args.async_ckpt,
+                                 compress_level=args.compress_level)
 
     t0 = time.perf_counter()
     print(f"=== {n}-rank CHAOS run: seed {seed}, {kills} injected kills, "

@@ -32,8 +32,11 @@ real MPI library picks one algorithm per communicator-wide operation.
                           linear arm (position-ascending), so any
                           *associative* op gives bit-identical results
                           on both arms
-                alltoall  pairwise exchange (send to idx+s, recv from
-                          idx-s), bounding per-endpoint queue depth
+                alltoall  gather-transpose-scatter through the minimum
+                          rank: 2(n-1) total messages (vs the pairwise
+                          exchange's n^2 — n-1 sequential blocking
+                          rounds per rank, which dominated the SIII-B
+                          drain's scalar counter exchange at 512 ranks)
 
 `allreduce_recursive_doubling` is additionally exposed as a third,
 latency-optimal allreduce arm (MPICH-style non-power-of-two pre/post
@@ -330,10 +333,10 @@ def alltoall(ep: Endpoint, ranks: Sequence[int], rows: List[Any],
     (none, in fact), all bookkeeping over the data plane.
     """
     algo = _resolve(algo)  # validate before consuming a tag slot
-    tag = _next_tag(ep, gid)
     if algo == "linear":
-        return _alltoall_linear(ep, ranks, rows, tag, timeout)
-    return _alltoall_pairwise(ep, ranks, rows, tag, timeout)
+        return _alltoall_linear(ep, ranks, rows, _next_tag(ep, gid),
+                                timeout)
+    return _alltoall_transpose(ep, ranks, rows, gid, timeout)
 
 
 def _alltoall_linear(ep, ranks, rows, tag, timeout):
@@ -349,16 +352,34 @@ def _alltoall_linear(ep, ranks, rows, tag, timeout):
     return out
 
 
-def _alltoall_pairwise(ep, ranks, rows, tag, timeout):
-    """Step s in 1..n-1: send to position idx+s, recv from idx-s —
-    one in-flight message per endpoint per step instead of n-1."""
+def _alltoall_transpose(ep, ranks, rows, gid, timeout):
+    """Tree arm: binomial gather of every rank's row vector to the
+    minimum rank, transpose at the root, direct column scatter back —
+    2(n-1) messages total (two tag slots, like the linear barrier).
+
+    The previous tree arm was the classic pairwise exchange (step s:
+    send to idx+s, recv from idx-s) — bandwidth-optimal on a real
+    network, but its n-1 SEQUENTIAL blocking rounds per rank are n^2
+    total messages, which is exactly the wrong shape for the SIII-B
+    drain's scalar counter exchange: at 512 GIL-bound inproc ranks the
+    counter alltoall alone took minutes.  The transpose arm trades
+    O(n) root-serial work (trivial for bookkeeping-sized rows) for a
+    250x message-count reduction at n=512."""
     n = len(ranks)
     idx = ranks.index(ep.rank)
-    out: List[Any] = [None] * n
-    out[idx] = rows[idx]
-    for s in range(1, n):
-        dst, src = (idx + s) % n, (idx - s) % n
-        ep.send(ranks[dst], pickle.dumps(rows[dst]), tag)
-        out[src] = pickle.loads(
-            ep.recv(ranks[src], tag, timeout=timeout).payload)
-    return out
+    if n == 1:
+        _next_tag(ep, gid)  # keep the two-slot tag discipline uniform
+        _next_tag(ep, gid)
+        return [rows[idx]]
+    root = min(ranks)
+    matrix = gather(ep, ranks, root, list(rows), gid, timeout, algo="tree")
+    tag = _next_tag(ep, gid)
+    if ep.rank == root:
+        root_idx = ranks.index(root)
+        out = [matrix[i][root_idx] for i in range(n)]
+        for i, r in enumerate(ranks):
+            if r != root:
+                ep.send(r, pickle.dumps([matrix[j][i] for j in range(n)]),
+                        tag)
+        return out
+    return pickle.loads(ep.recv(root, tag, timeout=timeout).payload)

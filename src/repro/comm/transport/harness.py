@@ -34,8 +34,9 @@ Failure semantics (the NERSC-production half of the paper's story):
     assembled from the snapshots ranks shipped at commit time;
   * `run_world_supervised` catches `RankFailure` and relaunches all
     ranks from that image — optionally on a different backend (the
-    image is transport-free JSON by construction) — bounding lost work
-    to the checkpoint interval.
+    image is forced through the transport-free binary image container,
+    `repro.core.codec.image_to_bytes`) — bounding lost work to the
+    checkpoint interval.
 
 Process start method is ``fork`` (closures over launcher state — e.g.
 a checkpoint image — reach the children without pickling); platforms
@@ -55,6 +56,7 @@ from repro.comm.transport.base import TAG_RESULT, Endpoint, TransportClosed
 from repro.comm.transport.faults import FaultPlan, RankKilled
 from repro.comm.transport.inproc import InprocTransport
 from repro.comm.transport.tcp import FabricSwitch, SocketTransport
+from repro.core.codec import image_from_bytes, image_to_bytes
 from repro.core.control import (CoordinatorClient, CoordinatorServer,
                                 RankFailure, make_control_plane)
 
@@ -398,10 +400,12 @@ def run_world_supervised(
     `fn_factory(attempt, image)` builds the per-rank function for one
     attempt; `image` is None on a cold start, else the last COMMITTED
     checkpoint image (`{"epoch", "n_ranks", "ranks": {str(rank): blob}}`)
-    — forced through a JSON round trip, so a blob that smuggled live
-    transport state would fail loudly, and restarting on a DIFFERENT
-    backend (pass a sequence of transport names to cycle through) is
-    correct by construction.
+    — forced through the transport-free binary image container
+    (`repro.core.codec.image_to_bytes` round trip: binary snapshot
+    blobs are inert bytes, dict blobs must be JSON-safe, so a blob
+    that smuggled live transport state would fail loudly), and
+    restarting on a DIFFERENT backend (pass a sequence of transport
+    names to cycle through) is correct by construction.
 
     On `RankFailure`: record it (to `log_dir` if given), adopt the
     failure's committed image if it carries one, and relaunch.  Raises
@@ -448,8 +452,10 @@ def run_world_supervised(
                       "image_epoch": None if rf.committed_image is None
                       else rf.committed_image["epoch"]}
             if rf.committed_image is not None:
-                # transport-free by construction: JSON round trip
-                image = json.loads(json.dumps(rf.committed_image))
+                # transport-free by construction: binary image
+                # container round trip (see the docstring)
+                image = image_from_bytes(image_to_bytes(
+                    rf.committed_image))
             failures.append(record)
             if log_dir:
                 with open(os.path.join(log_dir,
@@ -459,8 +465,8 @@ def run_world_supervised(
                                "partial_result_ranks":
                                    sorted(rf.partial_results)}, f, indent=1)
                 if image is not None:
-                    with open(os.path.join(log_dir, "last_image.json"),
-                              "w") as f:
-                        json.dump(image, f)
+                    with open(os.path.join(log_dir, "last_image.bin"),
+                              "wb") as f:
+                        f.write(image_to_bytes(image))
     assert last_failure is not None
     raise last_failure

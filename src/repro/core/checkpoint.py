@@ -39,10 +39,10 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.codec import (ChainPolicy, CheckpointError, DeltaChainError,
-                              DeltaCodec, ImageCodec, ImageError,
-                              ImageIntegrityError, QuantizeCodec, RawCodec,
-                              shard_digest)
+from repro.core.codec import (DEFAULT_COMPRESS_LEVEL, ChainPolicy,
+                              CheckpointError, DeltaChainError, DeltaCodec,
+                              ImageCodec, ImageError, ImageIntegrityError,
+                              QuantizeCodec, RawCodec, shard_digest)
 
 __all__ = ["CheckpointManager", "CheckpointError", "ImageError",
            "ImageIntegrityError", "DeltaChainError", "MANIFEST"]
@@ -126,12 +126,17 @@ class CheckpointManager:
                  delta_keys: Tuple[str, ...] = (), verify: bool = True,
                  full_every: int = 4, max_chain: int = ChainPolicy.max_chain,
                  codecs: Optional[Sequence[ImageCodec]] = None,
-                 use_pallas: bool = False, compress: bool = False):
+                 use_pallas: bool = False, compress: bool = False,
+                 compress_level: int = DEFAULT_COMPRESS_LEVEL):
         self.dir = directory
         self.keep = keep
         self.verify = verify
         self.use_pallas = use_pallas
         self.compress = compress
+        # deflate level for compress=True payload chunks; the default
+        # tracks repro.core.codec.DEFAULT_COMPRESS_LEVEL, which the
+        # image_codec_throughput benchmark picked
+        self.compress_level = compress_level
         # delta checkpoints form chains; bound them with periodic fulls
         # on the write side and a reconstruction-depth cap on the read
         # side (the two sides may be different processes/configs)
@@ -247,7 +252,8 @@ class CheckpointManager:
             }
             if self.compress:
                 entry["compressed"] = True
-                payloads = [zlib.compress(p, 1) for p in payloads]
+                payloads = [zlib.compress(p, self.compress_level)
+                            for p in payloads]
             files = []
             for pi, payload in enumerate(payloads):
                 chunks = [payload[o:o + CHUNK_BYTES]

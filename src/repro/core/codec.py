@@ -13,11 +13,20 @@ Two consumers share this module:
     launcher-side image collector via the `snap` op) encodes each
     rank's array state with `SnapshotCodec` /
     `IncrementalSnapshotter`: a FULL image every `ChainPolicy.full_every`
-    checkpoints, XOR deltas against the previous snapshot otherwise,
-    zlib-compressed and base64'd into transport-free JSON.  Restore
-    walks the base chain (`decode_chain` / `restore_rank_arrays`),
-    verifying every shard digest on the way — a corrupted or truncated
-    image is a typed `ImageIntegrityError`, never a garbage restore.
+    checkpoints, XOR deltas against the previous snapshot otherwise.
+    Since format 2 a snapshot blob is a BINARY container — magic +
+    compact JSON header (dtype, shape, digest, base epoch, stream
+    lengths) followed by length-prefixed raw zlib streams, decoded via
+    memoryview slicing with no base64/JSON payload copies.  Each cell
+    runs through a byte-SHUFFLE filter (HDF5/blosc style: transpose the
+    byte planes of multi-byte dtypes) before deflate, which is what
+    buys the container its size edge over the old zlib+base64-in-JSON
+    cells (format 1; see `migrate_blob` for the one-shot shim that
+    keeps committed images from older runs restorable).  Restore walks
+    the base chain (`decode_chain` / `restore_rank_arrays`), verifying
+    every shard digest on the way — a corrupted or truncated image is a
+    typed `ImageIntegrityError`, never a garbage restore (and never a
+    raw struct/zlib traceback).
 
 All heavy per-byte work (XOR delta, digest, int8 quantization) routes
 through the pallas kernel packages' host entry points
@@ -29,9 +38,11 @@ healthy.
 from __future__ import annotations
 
 import base64
+import json
+import struct
 import zlib
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -222,169 +233,432 @@ def shard_digest(data: bytes, use_pallas: bool = False) -> int:
 
 
 # ---------------------------------------------------------------------------
-# wire images: JSON-safe rank-snapshot codec with delta chains
+# wire images: binary rank-snapshot containers with delta chains
 # ---------------------------------------------------------------------------
 
-SNAP_FORMAT = 1
+SNAP_FORMAT = 2
 # top-level key the launcher-side image collector keys chain GC on: a
 # shipped blob carrying it is a delta member whose base epoch must stay
 # collectible until the blob itself is pruned
 BASE_EPOCH_KEY = "ckpt_base_epoch"
 
+# default deflate level for snapshot cells.  Picked by the
+# `image_codec_throughput` benchmark: behind the shuffle filter, level 1
+# encodes ~3x faster than level 6 for <1.5% more bytes on float shards
+# (and the filter itself, not the level, is what beats the old base64
+# path on size) — so the fast level is the right default.
+DEFAULT_COMPRESS_LEVEL = 1
 
-def _pack(raw: bytes, use_pallas: bool) -> Dict[str, Any]:
-    """bytes -> JSON-safe payload cell: zlib + base64 + digest.
+# container layout: magic | u8 version | pad(3) | u32 header_len |
+# u32 header_digest | header JSON | per-cell (u32 stream_len | raw zlib
+# stream), streams in header order.  The header is the only JSON left
+# in a snapshot; every payload byte is a raw deflate stream, and the
+# header itself is digest-protected so a bit-flip anywhere in the
+# container is a typed error, never a silently-wrong decode.
+_SNAP_MAGIC = b"MSNP"
+_SNAP_HDR = struct.Struct(">4sBxxxII")
+_STREAM_LEN = struct.Struct(">I")
 
-    The digest covers the COMPRESSED bytes, so truncation and bit-flips
-    are caught before decompression ever runs.  `znbytes` records the
-    compressed size — the real bytes shipped, which is what the
-    `ckpt_image_bytes` benchmark sums (base64 characters would
-    overstate it by 4/3)."""
-    comp = zlib.compress(raw, 1)
-    return {"z": base64.b64encode(comp).decode("ascii"),
-            "nbytes": len(raw),
-            "znbytes": len(comp),
-            "digest": shard_digest(comp, use_pallas)}
+Blob = Union[bytes, bytearray, memoryview, Dict]
 
 
-def _unpack(cell: Dict[str, Any], use_pallas: bool, what: str) -> bytes:
+def _shuffle(raw: bytes, itemsize: int) -> bytes:
+    """Byte-shuffle filter (HDF5/blosc style): transpose the byte planes
+    of an `itemsize`-wide array so deflate sees the highly-repetitive
+    exponent/high bytes as runs.  Lossless and cheap (one transpose);
+    measured: float32 shards compress ~7% smaller AND faster, integer
+    state 10-30x smaller."""
+    if itemsize <= 1 or len(raw) % itemsize:
+        return raw
+    planes = np.frombuffer(raw, np.uint8).reshape(-1, itemsize)
+    return np.ascontiguousarray(planes.T).tobytes()
+
+
+def _unshuffle(raw: bytes, itemsize: int) -> np.ndarray:
+    """Inverse of `_shuffle`; returns a fresh writable uint8 array."""
+    planes = np.frombuffer(raw, np.uint8).reshape(itemsize, -1)
+    return np.ascontiguousarray(planes.T).reshape(-1)
+
+
+def is_snap_blob(blob: Blob) -> bool:
+    """True when `blob` is a binary snapshot container (format 2)."""
+    return (isinstance(blob, (bytes, bytearray, memoryview))
+            and len(blob) >= len(_SNAP_MAGIC)
+            and bytes(blob[:len(_SNAP_MAGIC)]) == _SNAP_MAGIC)
+
+
+def _snap_header(blob: Blob) -> Tuple[Dict, int, memoryview]:
+    """Parse a container's header; returns (meta, payload_offset, view).
+
+    Every malformed input is a typed `ImageError` subclass — callers
+    (and the fuzz suite) never see a struct/zlib/json traceback."""
+    mv = memoryview(blob)
+    if len(mv) < _SNAP_HDR.size:
+        raise ImageIntegrityError(
+            f"truncated snapshot container ({len(mv)} bytes)")
+    magic, version, hlen, hdigest = _SNAP_HDR.unpack_from(mv)
+    if magic != _SNAP_MAGIC:
+        raise ImageError(f"not a snapshot container (magic {magic!r})")
+    if version != SNAP_FORMAT:
+        raise ImageError(f"unsupported snapshot container version "
+                         f"{version} (this build reads {SNAP_FORMAT})")
+    if bytes(mv[5:8]) != b"\x00\x00\x00":  # reserved pad must be zero
+        raise ImageIntegrityError("corrupt container prefix (reserved "
+                                  "bytes nonzero)")
+    end = _SNAP_HDR.size + hlen
+    if end > len(mv):
+        raise ImageIntegrityError(
+            f"truncated snapshot header ({hlen} bytes claimed, "
+            f"{len(mv) - _SNAP_HDR.size} present)")
+    hbytes = mv[_SNAP_HDR.size:end]
+    got = shard_digest(hbytes)
+    if got != hdigest:
+        raise ImageIntegrityError(
+            f"snapshot header digest mismatch ({got} != {hdigest})")
     try:
-        comp = base64.b64decode(cell["z"], validate=True)
-    except Exception as e:  # malformed base64 = corrupted in transit
-        raise ImageIntegrityError(f"{what}: undecodable payload: {e}") from e
-    got = shard_digest(comp, use_pallas)
+        meta = json.loads(bytes(hbytes).decode())
+    except Exception as e:  # noqa: BLE001 — corrupted header bytes
+        raise ImageIntegrityError(
+            f"corrupt snapshot header: {e}") from e
+    if (not isinstance(meta, dict)
+            or not isinstance(meta.get("arrays"), dict)):
+        raise ImageIntegrityError("corrupt snapshot header: not a meta dict")
+    return meta, end, mv
+
+
+def snap_meta(blob: Blob) -> Dict:
+    """A snapshot blob's metadata header, payload untouched.
+
+    Binary containers parse only the compact header (cheap — no
+    decompression); legacy format-1 dicts and plain app dicts are
+    returned as-is, so collector/benchmark code reads one shape."""
+    if isinstance(blob, dict):
+        return blob
+    return _snap_header(blob)[0]
+
+
+def blob_base_epoch(blob: Blob) -> Optional[int]:
+    """Delta-chain link of a shipped blob, if it advertises one — the
+    key the launcher-side image collector's chain GC walks.  Handles
+    binary containers, legacy dicts, and app blobs of ANY other
+    JSON-safe shape (lists, strings, None...) — anything that is not a
+    snapshot container is simply chainless (returns None), never an
+    exception into the collector's serve loop."""
+    if isinstance(blob, dict):
+        base = blob.get(BASE_EPOCH_KEY)
+    elif is_snap_blob(blob):
+        try:
+            base = _snap_header(blob)[0].get(BASE_EPOCH_KEY)
+        except ImageError:
+            return None
+    else:
+        return None
+    try:
+        return None if base is None else int(base)
+    except (TypeError, ValueError):
+        return None
+
+
+def _check_stream(mv: memoryview, off: int, cell: Dict, use_pallas: bool,
+                  what: str) -> Tuple[memoryview, int]:
+    """Bounds-check + digest-verify one length-prefixed stream; returns
+    (stream_view, next_offset) without copying the payload."""
+    try:
+        zn, n = int(cell["zn"]), int(cell["n"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise ImageIntegrityError(f"{what}: corrupt cell header") from e
+    if off + _STREAM_LEN.size + zn > len(mv):
+        raise ImageIntegrityError(
+            f"{what}: truncated payload section (need {zn} bytes at "
+            f"offset {off}, container ends at {len(mv)})")
+    if _STREAM_LEN.unpack_from(mv, off)[0] != zn:
+        raise ImageIntegrityError(
+            f"{what}: stream length prefix disagrees with the header")
+    off += _STREAM_LEN.size
+    stream = mv[off:off + zn]
+    got = shard_digest(stream, use_pallas)
     if got != cell["digest"]:
         raise ImageIntegrityError(
             f"{what}: digest mismatch ({got} != {cell['digest']})")
-    raw = zlib.decompress(comp)
-    if len(raw) != cell["nbytes"]:
+    return stream, off + zn
+
+
+def _inflate(stream: memoryview, cell: Dict, what: str) -> bytes:
+    try:
+        raw = zlib.decompress(stream)
+    except zlib.error as e:  # digest passed but stream malformed
+        raise ImageIntegrityError(f"{what}: undecodable payload: "
+                                  f"{e}") from e
+    if len(raw) != cell["n"]:
         raise ImageIntegrityError(
-            f"{what}: truncated payload ({len(raw)} != {cell['nbytes']})")
+            f"{what}: truncated payload ({len(raw)} != {cell['n']})")
+    filt = int(cell.get("filter", 0))
+    if filt > 1:
+        return _unshuffle(raw, filt)
     return raw
 
 
-class SnapshotCodec:
-    """Encode/decode one rank's array state as a JSON-safe image blob.
+def _pack_container(magic: bytes, version: int, meta: Dict,
+                    sections: Tuple[bytes, ...] = (), *,
+                    prefixed: bool) -> bytes:
+    """Assemble a container: fixed prefix | digest-protected compact
+    JSON header | sections (length-prefixed streams for snapshot
+    containers, raw blobs for the image container).  The ONE place the
+    normative layout lives — encode, the migration shim, and the image
+    container all call it, so the format cannot fork."""
+    hjson = json.dumps(meta, sort_keys=True,
+                       separators=(",", ":")).encode()
+    parts = [_SNAP_HDR.pack(magic, version, len(hjson),
+                            shard_digest(hjson)), hjson]
+    for z in sections:
+        if prefixed:
+            parts.append(_STREAM_LEN.pack(len(z)))
+        parts.append(z)
+    # single join: one copy total into the container, no per-cell
+    # base64/JSON intermediates
+    return b"".join(parts)
 
-    encode(epoch, arrays, base=None, extra=None) -> blob:
-      {"ckpt_format": 1, "epoch": e, "encoding": "full" | "delta",
-       "ckpt_base_epoch": be,                    # delta blobs only
-       "arrays": {name: {"shape", "dtype", "encoding", "payload"}},
-       "payload_bytes": total encoded bytes, "extra": {...}}
+
+def _as_array(raw, dtype, shape, what: str) -> np.ndarray:
+    """Reinterpret inflated cell bytes (bytes or a uint8 array from the
+    unshuffle) as a writable `dtype` array of `shape`; size mismatches
+    are integrity errors, not numpy tracebacks."""
+    try:
+        if isinstance(raw, np.ndarray):
+            return raw.view(dtype).reshape(shape)
+        return np.frombuffer(raw, dtype).reshape(shape).copy()
+    except (ValueError, TypeError) as e:
+        raise ImageIntegrityError(
+            f"{what}: payload does not fit shape {shape} "
+            f"dtype {dtype}: {e}") from e
+
+
+class SnapshotCodec:
+    """Encode/decode one rank's array state as a binary image container.
+
+    encode(epoch, arrays, base=None, extra=None) -> bytes: the format-2
+    container (magic | version | compact JSON header | length-prefixed
+    raw zlib streams).  The header carries {"ckpt_format": 2, "epoch",
+    "encoding": "full" | "delta", "ckpt_base_epoch" (delta blobs only),
+    "arrays": {name: {"shape", "dtype", "encoding", cell...}},
+    "payload_bytes", and the app `extra` dict rides as its own
+    compressed+digested stream.
 
     A delta blob encodes each array as an XOR against the base snapshot
-    (pallas kernel w/ oracle fallback), zlib-compressed — unchanged
-    regions are zero runs, so small-change steps produce small images.
+    (pallas kernel w/ oracle fallback) — unchanged regions are zero
+    runs, so small-change steps produce small images.  Every cell runs
+    through the byte-shuffle filter, then deflate at `compress_level`.
     Arrays absent from the base (or with changed shape/dtype) degrade
-    to full cells inside a delta blob.  Every payload cell carries a
-    digest over its compressed bytes; decode verifies it and raises
-    `ImageIntegrityError` on any mismatch.
+    to full cells inside a delta blob.  Every stream carries a digest
+    over its compressed bytes; decode verifies it via memoryview slices
+    (no payload copies) and raises `ImageIntegrityError` on any
+    mismatch or truncation.  Legacy format-1 JSON blobs decode through
+    the `migrate_blob` shim transparently.
 
     >>> import numpy as np
     >>> codec = SnapshotCodec()
     >>> blob = codec.encode(1, {"w": np.zeros(4, np.float32)})
-    >>> (blob["encoding"], sorted(blob["arrays"]))
-    ('full', ['w'])
+    >>> (is_snap_blob(blob), snap_meta(blob)["encoding"])
+    (True, 'full')
     >>> codec.decode(blob)["w"].tolist()
     [0.0, 0.0, 0.0, 0.0]
     """
 
     def __init__(self, use_pallas: bool = False,
-                 quantize_keys: Tuple[str, ...] = ()):
+                 quantize_keys: Tuple[str, ...] = (),
+                 compress_level: int = DEFAULT_COMPRESS_LEVEL):
         self.use_pallas = use_pallas
         self.quantize_keys = tuple(quantize_keys)
+        self.compress_level = compress_level
 
     # ---- encode ------------------------------------------------------------
+    def _pack(self, raw: bytes, itemsize: int = 1,
+              ) -> Tuple[bytes, Dict[str, Any]]:
+        """bytes -> (zlib stream, cell meta): shuffle + deflate + digest.
+
+        The digest covers the COMPRESSED bytes, so truncation and
+        bit-flips are caught before decompression ever runs.  `zn`
+        records the stream size — the real bytes shipped, which is what
+        the `ckpt_image_bytes` benchmark sums."""
+        filt = itemsize if (itemsize > 1 and len(raw) % itemsize == 0) else 0
+        comp = zlib.compress(_shuffle(raw, itemsize) if filt else raw,
+                             self.compress_level)
+        return comp, {"n": len(raw), "zn": len(comp), "filter": filt,
+                      "digest": shard_digest(comp, self.use_pallas)}
+
     def _encode_cell(self, name: str, arr: np.ndarray,
-                     base: Optional[Dict[str, np.ndarray]]) -> Dict:
+                     base: Optional[Dict[str, np.ndarray]],
+                     streams: List[bytes]) -> Dict:
         arr = np.ascontiguousarray(arr)
         cell: Dict[str, Any] = {"shape": list(arr.shape),
                                 "dtype": str(arr.dtype)}
         if name in self.quantize_keys:
             q, s, pad = _quantize_dispatch(arr, self.use_pallas)
+            zq, mq = self._pack(q.tobytes())           # int8: no shuffle
+            zs, ms = self._pack(s.tobytes(), 4)        # f32 scales
             cell.update(encoding="int8_block", pad=pad,
-                        payload=_pack(q.tobytes(), self.use_pallas),
-                        scales=_pack(s.tobytes(), self.use_pallas))
+                        payload=mq, scales=ms)
+            streams += [zq, zs]
             return cell
         prev = None if base is None else base.get(name)
         if (prev is not None and prev.shape == arr.shape
                 and prev.dtype == arr.dtype):
             d = _delta_dispatch(arr, prev, self.use_pallas)
-            cell.update(encoding="xor_delta",
-                        payload=_pack(np.asarray(d).tobytes(),
-                                      self.use_pallas))
+            # shuffle the XOR bytes by the SOURCE itemsize: zeroed
+            # high-byte planes of barely-changed values become runs
+            z, m = self._pack(np.asarray(d).tobytes(), arr.dtype.itemsize)
+            cell.update(encoding="xor_delta", payload=m)
         else:
-            cell.update(encoding="raw",
-                        payload=_pack(arr.tobytes(), self.use_pallas))
+            z, m = self._pack(arr.tobytes(), arr.dtype.itemsize)
+            cell.update(encoding="raw", payload=m)
+        streams.append(z)
         return cell
 
     def encode(self, epoch: int, arrays: Dict[str, np.ndarray], *,
                base: Optional[Tuple[int, Dict[str, np.ndarray]]] = None,
-               extra: Optional[Dict] = None) -> Dict:
+               extra: Optional[Dict] = None) -> bytes:
         base_epoch, base_arrays = base if base is not None else (None, None)
-        cells = {name: self._encode_cell(name, np.asarray(arr), base_arrays)
+        streams: List[bytes] = []
+        cells = {name: self._encode_cell(name, np.asarray(arr), base_arrays,
+                                         streams)
                  for name, arr in sorted(arrays.items())}
-        blob: Dict[str, Any] = {
+        meta: Dict[str, Any] = {
             "ckpt_format": SNAP_FORMAT,
             "epoch": epoch,
             "encoding": "full" if base_epoch is None else "delta",
             "arrays": cells,
             "payload_bytes": sum(
-                c["payload"]["znbytes"]
-                + c.get("scales", {}).get("znbytes", 0)
+                c["payload"]["zn"] + c.get("scales", {}).get("zn", 0)
                 for c in cells.values()),
-            "extra": extra or {},
         }
         if base_epoch is not None:
-            blob[BASE_EPOCH_KEY] = base_epoch
-        return blob
+            meta[BASE_EPOCH_KEY] = base_epoch
+        if extra:
+            # the app dict ships as its own compressed+digested stream
+            # (chaos images carry serialized agents here — real bytes)
+            ze, me = self._pack(json.dumps(extra).encode())
+            meta["extra_cell"] = me
+            streams.append(ze)
+        else:
+            meta["extra"] = {}
+        return _pack_container(_SNAP_MAGIC, SNAP_FORMAT, meta,
+                               tuple(streams), prefixed=True)
 
     # ---- decode ------------------------------------------------------------
-    def decode(self, blob: Dict, *,
+    def _cell_streams(self, meta: Dict, payload_off: int, mv: memoryview,
+                      epoch) -> Dict[str, Tuple[memoryview, ...]]:
+        """Walk the payload section in header order; verify every
+        stream's bounds + digest; return per-cell stream views."""
+        out: Dict[str, Tuple[memoryview, ...]] = {}
+        off = payload_off
+        for name, cell in meta["arrays"].items():
+            what = f"epoch {epoch} array {name!r}"
+            if not isinstance(cell, dict):
+                raise ImageIntegrityError(f"{what}: corrupt cell header")
+            views = []
+            for part in ("payload", "scales"):
+                if part not in cell:
+                    continue
+                view, off = _check_stream(mv, off, cell[part],
+                                          self.use_pallas, what)
+                views.append(view)
+            out[name] = tuple(views)
+        if "extra_cell" in meta:
+            view, off = _check_stream(mv, off, meta["extra_cell"],
+                                      self.use_pallas,
+                                      f"epoch {epoch} extra")
+            out["__extra__"] = (view,)
+        return out
+
+    def decode_extra(self, blob: Blob) -> Dict:
+        """The app `extra` dict of a snapshot blob, digest-verified.
+        Legacy dict blobs return their inline "extra" (or, for plain
+        app dicts that never went through the codec, the dict itself)."""
+        if isinstance(blob, dict):
+            return blob.get("extra", blob)
+        meta, off, mv = _snap_header(blob)
+        if "extra_cell" not in meta:
+            return meta.get("extra", {})
+        epoch = meta.get("epoch")
+        what = f"epoch {epoch} extra"
+        # the extra cell is the LAST stream: skip the array streams
+        # arithmetically (the header is digest-protected, so the zn
+        # values are trustworthy) instead of re-digesting every array
+        # payload — restore_rank_arrays calls this right after
+        # decode_chain verified them all
+        try:
+            for cell in meta["arrays"].values():
+                for part in ("payload", "scales"):
+                    if part in cell:
+                        off += _STREAM_LEN.size + int(cell[part]["zn"])
+        except (KeyError, TypeError, ValueError) as e:
+            raise ImageIntegrityError(
+                f"{what}: corrupt cell header") from e
+        view, _ = _check_stream(mv, off, meta["extra_cell"],
+                                self.use_pallas, what)
+        raw = _inflate(view, meta["extra_cell"], what)
+        try:
+            return json.loads(bytes(raw).decode())
+        except Exception as e:  # noqa: BLE001 — corrupted extra
+            raise ImageIntegrityError(f"corrupt extra dict: {e}") from e
+
+    def decode(self, blob: Blob, *,
                base_arrays: Optional[Dict[str, np.ndarray]] = None,
                ) -> Dict[str, np.ndarray]:
-        if blob.get("ckpt_format") != SNAP_FORMAT:
-            raise ImageError(
-                f"not a SnapshotCodec blob (format "
-                f"{blob.get('ckpt_format')!r})")
-        if blob["encoding"] == "delta" and base_arrays is None:
+        if isinstance(blob, dict):
+            if blob.get("ckpt_format") == 1:
+                blob = migrate_blob(blob)  # legacy JSON image, one shot
+            else:
+                raise ImageError(
+                    f"not a SnapshotCodec blob (format "
+                    f"{blob.get('ckpt_format')!r})")
+        meta, payload_off, mv = _snap_header(blob)
+        epoch = meta.get("epoch")
+        if meta.get("encoding") == "delta" and base_arrays is None:
             raise DeltaChainError(
-                f"delta blob for epoch {blob['epoch']} decoded without "
-                f"its base (epoch {blob.get(BASE_EPOCH_KEY)})")
+                f"delta blob for epoch {epoch} decoded without "
+                f"its base (epoch {meta.get(BASE_EPOCH_KEY)})")
+        streams = self._cell_streams(meta, payload_off, mv, epoch)
         out: Dict[str, np.ndarray] = {}
-        for name, cell in blob["arrays"].items():
-            shape = tuple(cell["shape"])
-            dtype = np.dtype(cell["dtype"])
-            what = f"epoch {blob['epoch']} array {name!r}"
-            raw = _unpack(cell["payload"], self.use_pallas, what)
-            if cell["encoding"] == "raw":
-                out[name] = np.frombuffer(raw, dtype).reshape(shape).copy()
-            elif cell["encoding"] == "int8_block":
-                scales = _unpack(cell["scales"], self.use_pallas, what)
-                q = np.frombuffer(raw, np.int8).reshape(-1, quant_ref.QBLOCK)
-                s = np.frombuffer(scales, np.float32).reshape(-1, 1)
+        for name, cell in meta["arrays"].items():
+            what = f"epoch {epoch} array {name!r}"
+            try:
+                shape = tuple(cell["shape"])
+                dtype = np.dtype(cell["dtype"])
+            except (KeyError, TypeError) as e:
+                raise ImageIntegrityError(
+                    f"{what}: corrupt cell header") from e
+            raw = _inflate(streams[name][0], cell["payload"], what)
+            if cell.get("encoding") == "raw":
+                out[name] = _as_array(raw, dtype, shape, what)
+            elif cell.get("encoding") == "int8_block":
+                scales = _inflate(streams[name][1], cell["scales"], what)
+                q = _as_array(raw, np.int8, (-1, quant_ref.QBLOCK), what)
+                s = _as_array(scales, np.float32, (-1, 1), what)
                 out[name] = quant_ref.dequantize_np(q, s, cell["pad"],
                                                     shape, dtype)
-            elif cell["encoding"] == "xor_delta":
+            elif cell.get("encoding") == "xor_delta":
                 prev = (base_arrays or {}).get(name)
                 if prev is None or prev.shape != shape or prev.dtype != dtype:
                     raise DeltaChainError(
                         f"{what}: delta cell without a matching base array")
-                out[name] = apply_np(prev, np.frombuffer(raw, np.uint8),
+                out[name] = apply_np(prev, _as_array(raw, np.uint8, (-1,),
+                                                     what),
                                      shape, dtype)
             else:
                 raise ImageError(f"{what}: unknown encoding "
                                  f"{cell['encoding']!r}")
         return out
 
-    def decode_chain(self, blobs_by_epoch: Dict[int, Dict], epoch: int, *,
+    def decode_chain(self, blobs_by_epoch: Dict[int, Blob], epoch: int, *,
                      max_chain: int = ChainPolicy.max_chain,
                      ) -> Dict[str, np.ndarray]:
         """Reconstruct the arrays of `epoch` by walking its base chain
         (base-first application of XOR deltas).  `blobs_by_epoch` may
-        key epochs as ints or strings (JSON round trips stringify)."""
+        key epochs as ints or strings, and may mix binary containers
+        with legacy format-1 dicts (a migrated run's history)."""
         index = {int(e): b for e, b in blobs_by_epoch.items()}
-        chain: List[Dict] = []
+        chain: List[Blob] = []
         e: Optional[int] = epoch
         while e is not None:
             blob = index.get(e)
@@ -397,8 +671,7 @@ class SnapshotCodec:
                 raise DeltaChainError(
                     f"epoch {epoch}: delta chain longer than the "
                     f"max_chain bound ({max_chain})")
-            e = blob.get(BASE_EPOCH_KEY)
-            e = None if e is None else int(e)
+            e = blob_base_epoch(blob)
         arrays: Optional[Dict[str, np.ndarray]] = None
         for blob in reversed(chain):
             arrays = self.decode(blob, base_arrays=arrays)
@@ -448,7 +721,7 @@ class IncrementalSnapshotter:
         return lambda: codec.encode(epoch, arrays, base=base, extra=extra)
 
     def snapshot(self, epoch: int, arrays: Dict[str, np.ndarray],
-                 extra: Optional[Dict] = None) -> Dict:
+                 extra: Optional[Dict] = None) -> bytes:
         """Synchronous form: stage + encode in one call."""
         return self.stage(epoch, arrays, extra)()
 
@@ -460,7 +733,9 @@ def restore_rank_arrays(image: Dict, rank: int,
     """Reconstruct one rank's arrays from a committed checkpoint image.
 
     `image` is the collector's committed image ({"epoch", "ranks",
-    "chains", ...}), possibly after a JSON round trip (string keys).
+    "chains", ...}), possibly after an `image_to_bytes` /
+    `image_from_bytes` round trip (string keys; binary blob bytes) or a
+    legacy JSON round trip (format-1 dict blobs — migrated on the fly).
     Returns (arrays, extra) where `extra` is the app dict the rank
     attached at encode time.  Raises `ImageIntegrityError` /
     `DeltaChainError` on corruption or broken chains.
@@ -470,8 +745,228 @@ def restore_rank_arrays(image: Dict, rank: int,
     blob = ranks[rank] if rank in ranks else ranks[str(rank)]
     chains = image.get("chains", {})
     chain = chains.get(rank, chains.get(str(rank), {}))
+    epoch = int(snap_meta(blob)["epoch"])
     blobs = {int(e): b for e, b in chain.items()}
-    blobs[int(blob["epoch"])] = blob
-    arrays = codec.decode_chain(blobs, int(blob["epoch"]),
-                                max_chain=max_chain)
-    return arrays, blob.get("extra", {})
+    blobs[epoch] = blob
+    arrays = codec.decode_chain(blobs, epoch, max_chain=max_chain)
+    return arrays, codec.decode_extra(blob)
+
+
+# ---------------------------------------------------------------------------
+# legacy format 1 (zlib+base64-in-JSON cells): one-shot migration shim
+# ---------------------------------------------------------------------------
+
+def encode_legacy_json(epoch: int, arrays: Dict[str, np.ndarray], *,
+                       base: Optional[Tuple[int,
+                                            Dict[str, np.ndarray]]] = None,
+                       extra: Optional[Dict] = None,
+                       use_pallas: bool = False) -> Dict:
+    """The format-1 encoder, kept VERBATIM as the migration shim's
+    round-trip twin and the `image_codec_throughput` benchmark's
+    baseline arm: zlib level 1, base64'd into JSON-safe cells — the
+    ~33% wire inflation the binary container exists to remove.  New
+    code must not write this format."""
+    def pack(raw: bytes) -> Dict[str, Any]:
+        comp = zlib.compress(raw, 1)
+        return {"z": base64.b64encode(comp).decode("ascii"),
+                "nbytes": len(raw), "znbytes": len(comp),
+                "digest": shard_digest(comp, use_pallas)}
+
+    base_epoch, base_arrays = base if base is not None else (None, None)
+    cells: Dict[str, Dict] = {}
+    for name, arr in sorted(arrays.items()):
+        arr = np.ascontiguousarray(np.asarray(arr))
+        cell: Dict[str, Any] = {"shape": list(arr.shape),
+                                "dtype": str(arr.dtype)}
+        prev = None if base_arrays is None else base_arrays.get(name)
+        if (prev is not None and prev.shape == arr.shape
+                and prev.dtype == arr.dtype):
+            d = _delta_dispatch(arr, prev, use_pallas)
+            cell.update(encoding="xor_delta",
+                        payload=pack(np.asarray(d).tobytes()))
+        else:
+            cell.update(encoding="raw", payload=pack(arr.tobytes()))
+        cells[name] = cell
+    blob: Dict[str, Any] = {
+        "ckpt_format": 1, "epoch": epoch,
+        "encoding": "full" if base_epoch is None else "delta",
+        "arrays": cells,
+        "payload_bytes": sum(c["payload"]["znbytes"]
+                             for c in cells.values()),
+        "extra": extra or {},
+    }
+    if base_epoch is not None:
+        blob[BASE_EPOCH_KEY] = base_epoch
+    return blob
+
+
+def migrate_blob(blob: Dict, use_pallas: bool = False) -> bytes:
+    """Format-1 JSON blob -> format-2 binary container, WITHOUT
+    recompressing: each cell's zlib stream is base64-decoded and
+    spliced into the payload section verbatim (filter 0), its digest —
+    which covers the compressed bytes — carried over unchanged.  So a
+    committed image from an older run migrates in one cheap pass and
+    every integrity guarantee survives the migration."""
+    if blob.get("ckpt_format") != 1:
+        raise ImageError(f"not a format-1 blob "
+                         f"(format {blob.get('ckpt_format')!r})")
+    streams: List[bytes] = []
+    cells: Dict[str, Dict] = {}
+    # SORTED iteration: the header is serialized with sort_keys, and
+    # decode matches streams to cells in header order — a legacy blob
+    # whose arrays dict was inserted unsorted (an externally
+    # re-serialized image) must not migrate to misaligned streams
+    for name, cell in sorted(blob["arrays"].items()):
+        out = {"shape": cell["shape"], "dtype": cell["dtype"],
+               "encoding": cell["encoding"]}
+        if "pad" in cell:
+            out["pad"] = cell["pad"]
+        for part in ("payload", "scales"):
+            if part not in cell:
+                continue
+            old = cell[part]
+            try:
+                comp = base64.b64decode(old["z"], validate=True)
+            except Exception as e:  # noqa: BLE001 — corrupt legacy cell
+                raise ImageIntegrityError(
+                    f"array {name!r}: undecodable legacy payload: "
+                    f"{e}") from e
+            out[part] = {"n": old["nbytes"], "zn": len(comp), "filter": 0,
+                         "digest": old["digest"]}
+            streams.append(comp)
+        cells[name] = out
+    meta: Dict[str, Any] = {
+        "ckpt_format": SNAP_FORMAT, "epoch": blob["epoch"],
+        "encoding": blob["encoding"], "arrays": cells,
+        "payload_bytes": sum(len(z) for z in streams),
+        "migrated_from": 1,
+    }
+    if blob.get(BASE_EPOCH_KEY) is not None:
+        meta[BASE_EPOCH_KEY] = int(blob[BASE_EPOCH_KEY])
+    extra = blob.get("extra") or {}
+    if extra:
+        codec = SnapshotCodec(use_pallas=use_pallas)
+        ze, me = codec._pack(json.dumps(extra).encode())
+        meta["extra_cell"] = me
+        streams.append(ze)
+    else:
+        meta["extra"] = {}
+    return _pack_container(_SNAP_MAGIC, SNAP_FORMAT, meta,
+                           tuple(streams), prefixed=True)
+
+
+def migrate_image(image: Dict) -> Dict:
+    """One-shot migration of a committed image: every format-1 dict
+    blob in "ranks"/"chains" becomes a binary container; blobs already
+    binary (or plain app dicts) pass through untouched."""
+    def conv(blob):
+        if isinstance(blob, dict) and blob.get("ckpt_format") == 1:
+            return migrate_blob(blob)
+        return blob
+
+    out = dict(image)
+    out["ranks"] = {r: conv(b) for r, b in image.get("ranks", {}).items()}
+    if "chains" in image:
+        out["chains"] = {r: {e: conv(b) for e, b in chain.items()}
+                         for r, chain in image["chains"].items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# committed-image container: the supervisor's transport-free unit
+# ---------------------------------------------------------------------------
+
+# layout mirrors the snapshot container: magic | u8 version | pad(3) |
+# u32 header_len | u32 header_digest | header JSON | blob section.
+# Binary snapshot blobs live in the blob section and are referenced
+# from the header as {"_bin": [offset, length]}; JSON-safe app blobs
+# (e.g. serialized agents) ride inline in the header — so the
+# serialized image stays transport-free BY CONSTRUCTION: a blob that
+# smuggled live state fails json.dumps loudly, and binary blobs are
+# inert bytes.
+_IMG_MAGIC = b"MIMG"
+IMG_FORMAT = 1
+
+
+def image_to_bytes(image: Dict) -> bytes:
+    """Serialize a committed checkpoint image (the collector's
+    {"epoch", "n_ranks", "ranks", "chains"} dict, blobs binary or
+    JSON-safe) to one self-contained byte string — what the supervisor
+    round-trips before every restart and what `--log-dir` persists.
+
+    >>> import numpy as np
+    >>> blob = SnapshotCodec().encode(1, {"w": np.ones(3, np.float32)})
+    >>> img = {"epoch": 1, "n_ranks": 1, "ranks": {0: blob}}
+    >>> out = image_from_bytes(image_to_bytes(img))
+    >>> restore_rank_arrays(out, 0)[0]["w"].tolist()
+    [1.0, 1.0, 1.0]
+    """
+    blobs: List[bytes] = []
+    off = [0]
+
+    def ref(blob):
+        if isinstance(blob, (bytes, bytearray, memoryview)):
+            b = bytes(blob)
+            r = {"_bin": [off[0], len(b)]}
+            blobs.append(b)
+            off[0] += len(b)
+            return r
+        return blob  # JSON-safe app blob: rides in the header
+
+    header = {k: v for k, v in image.items() if k not in ("ranks", "chains")}
+    header["img_format"] = IMG_FORMAT
+    header["ranks"] = {str(r): ref(b)
+                       for r, b in image.get("ranks", {}).items()}
+    if "chains" in image:
+        header["chains"] = {str(r): {str(e): ref(b)
+                                     for e, b in chain.items()}
+                            for r, chain in image["chains"].items()}
+    return _pack_container(_IMG_MAGIC, IMG_FORMAT, header, tuple(blobs),
+                           prefixed=False)
+
+
+def image_from_bytes(data: Union[bytes, bytearray, memoryview]) -> Dict:
+    """Inverse of `image_to_bytes`; binary blobs come back as `bytes`,
+    rank/epoch keys as strings (exactly like the old JSON round trip,
+    which every restore path already tolerates)."""
+    mv = memoryview(data)
+    if len(mv) < _SNAP_HDR.size:
+        raise ImageIntegrityError(f"truncated image container "
+                                  f"({len(mv)} bytes)")
+    magic, version, hlen, hdigest = _SNAP_HDR.unpack_from(mv)
+    if magic != _IMG_MAGIC:
+        raise ImageError(f"not an image container (magic {magic!r})")
+    if version != IMG_FORMAT:
+        raise ImageError(f"unsupported image container version {version}")
+    if bytes(mv[5:8]) != b"\x00\x00\x00":
+        raise ImageIntegrityError("corrupt container prefix (reserved "
+                                  "bytes nonzero)")
+    end = _SNAP_HDR.size + hlen
+    if end > len(mv):
+        raise ImageIntegrityError("truncated image container header")
+    hbytes = mv[_SNAP_HDR.size:end]
+    got = shard_digest(hbytes)
+    if got != hdigest:
+        raise ImageIntegrityError(
+            f"image header digest mismatch ({got} != {hdigest})")
+    try:
+        header = json.loads(bytes(hbytes).decode())
+    except Exception as e:  # noqa: BLE001
+        raise ImageIntegrityError(f"corrupt image header: {e}") from e
+
+    def deref(blob):
+        if isinstance(blob, dict) and "_bin" in blob:
+            o, ln = blob["_bin"]
+            lo = end + int(o)
+            if lo + int(ln) > len(mv):
+                raise ImageIntegrityError(
+                    "image blob section truncated")
+            return bytes(mv[lo:lo + int(ln)])
+        return blob
+
+    out = {k: v for k, v in header.items() if k != "img_format"}
+    out["ranks"] = {r: deref(b) for r, b in header.get("ranks", {}).items()}
+    if "chains" in header:
+        out["chains"] = {r: {e: deref(b) for e, b in chain.items()}
+                         for r, chain in header["chains"].items()}
+    return out

@@ -61,7 +61,7 @@ import traceback
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.comm.transport.base import TAG_CTRL, TAG_INTENT, Endpoint
-from repro.core.codec import BASE_EPOCH_KEY
+from repro.core.codec import blob_base_epoch
 from repro.core.coordinator import CheckpointAborted, Coordinator
 
 # ---------------------------------------------------------------------------
@@ -261,10 +261,10 @@ class CoordinatorServer:
     @staticmethod
     def _blob_base(blob) -> Optional[int]:
         """Delta-chain link of a shipped blob, if it advertises one
-        (the `repro.core.codec` incremental-snapshot convention)."""
-        if isinstance(blob, dict) and blob.get(BASE_EPOCH_KEY) is not None:
-            return int(blob[BASE_EPOCH_KEY])
-        return None
+        (the `repro.core.codec` incremental-snapshot convention) —
+        parsed from the compact header of a binary container, or the
+        dict key of a legacy/app blob."""
+        return blob_base_epoch(blob)
 
     def _prune_snaps(self) -> None:
         """Chain-aware snapshot GC: drop epochs superseded by a newer
@@ -557,12 +557,15 @@ class CoordinatorClient:
         self._send({"op": "mark_dead", "rank": rank})
 
     # ---- failure / recovery plumbing ---------------------------------------
-    def ship_snapshot(self, epoch: int, blob: Dict) -> None:
+    def ship_snapshot(self, epoch: int, blob) -> None:
         """Ship this rank's checkpoint snapshot to the launcher-side
         image collector (fire-and-forget, ordered before the rank's
-        `committed` report by per-(src, tag) FIFO).  `blob` must be
-        JSON-serializable: the supervisor materializes the assembled
-        image as transport-free JSON before restarting from it."""
+        `committed` report by per-(src, tag) FIFO).  `blob` is a binary
+        snapshot container (`repro.core.codec.SnapshotCodec`) or a
+        JSON-safe dict: the supervisor materializes the assembled image
+        through the transport-free `image_to_bytes` container before
+        restarting from it, so live transport state cannot smuggle
+        through."""
         self._send({"op": "snap", "rank": self.ep.rank, "epoch": epoch,
                     "blob": blob})
 

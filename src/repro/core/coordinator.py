@@ -88,6 +88,11 @@ class Coordinator:
         self.parked_exited: Dict[int, Dict[int, int]] = {}
         self.parked_epoch: Dict[int, int] = {}
         self.park_verdict: Dict[int, str] = {}
+        # last time ANY rank parked: the watchdog measures staleness
+        # from the newest park event, not each rank's own park — while
+        # parks keep arriving, phase 1 is making progress and nobody
+        # withdraws (see try_park)
+        self._last_park_t = 0.0
         self._commit_count = 0
         # async pipeline bookkeeping, PER EPOCH (the shared
         # _commit_count belongs to one sync commit round at a time, but
@@ -269,6 +274,7 @@ class Coordinator:
                 self.entered.setdefault(gid, {}).setdefault(rank, cnt)
             self.last_seen[rank] = time.monotonic()
             park_t = time.monotonic()
+            self._last_park_t = park_t
             try:
                 self._try_close(epoch)
                 while True:
@@ -283,10 +289,17 @@ class Coordinator:
                         return "continue"
                     now = time.monotonic()
                     missing = len(self._live()) - self._n_parked()
-                    if now - park_t > self.unblock_window and missing:
-                        # watchdog: someone is stuck without having
-                        # reported (raced past the intent flag) —
-                        # withdraw and retry
+                    # the watchdog window measures staleness of the
+                    # NEWEST park event, not this rank's own: while
+                    # parks keep arriving phase 1 is converging, and
+                    # withdrawing early parkers at scale (hundreds of
+                    # GIL-bound ranks park over seconds) just forces a
+                    # re-park storm that can livelock closure.  Only
+                    # when no one has parked for a full window AND
+                    # ranks are missing is someone truly stuck (raced
+                    # past the intent flag) — withdraw and retry.
+                    ref_t = max(park_t, self._last_park_t)
+                    if now - ref_t > self.unblock_window and missing:
                         self.rank_state[rank] = self.RUNNING
                         self.stats["watchdog_withdrawals"] += 1
                         return "continue"
@@ -306,7 +319,7 @@ class Coordinator:
                     wait_t = min(0.2, deadline - now)
                     if missing:
                         wait_t = min(wait_t, max(
-                            0.001, self.unblock_window - (now - park_t)))
+                            0.001, self.unblock_window - (now - ref_t)))
                     self._cv.wait(wait_t)
             finally:
                 self.parked_exited.pop(rank, None)
@@ -327,7 +340,15 @@ class Coordinator:
             self.stats["control_messages"] += 1
             if epoch is not None:
                 self.staged.setdefault(epoch, set()).add(rank)
-            self._cv.notify_all()
+            # notify only when the round can actually complete: a
+            # per-report notify_all wakes every phase-2 waiter (n
+            # wait_released workers) n times — a quadratic wakeup storm
+            # under the one coordinator lock that dominated the SYNC
+            # commit round at 512 ranks.  wait_all_committed's 0.2s
+            # poll cap covers the no-notify window; deaths/aborts
+            # notify on their own paths.
+            if self._commit_count >= len(self._live()):
+                self._cv.notify_all()
 
     def wait_all_committed(self, epoch: int, timeout: float = 120.0) -> None:
         deadline = time.monotonic() + timeout

@@ -221,7 +221,8 @@ class RankAgent:
         Async mode (`async_commit=True`): `snapshot()` only STAGES —
         capture the cut's values cheaply and return either None
         (nothing to upload / already handled) or a zero-arg callable
-        that produces the JSON-safe blob to ship.  The rank resumes
+        that produces the blob to ship (a binary snapshot container or
+        a JSON-safe dict).  The rank resumes
         compute immediately; serialization, delta-encoding and the
         `snap` upload run on the background writer, and the
         coordinator finalizes the epoch only after every rank's writer

@@ -61,20 +61,37 @@ def checksum_ref(data):
     return fold(block_sums_ref(to_words(data)))
 
 
+def _block_sums_np(words: np.ndarray, idx: np.ndarray):
+    s1 = np.add.reduce(words, axis=-1, dtype=np.uint32)
+    s2 = np.add.reduce((words * idx).astype(np.uint32), axis=-1,
+                       dtype=np.uint32)
+    return s1, s2
+
+
 def checksum_np(data: np.ndarray) -> int:
-    """NumPy twin used on the host write path (identical definition)."""
+    """NumPy twin used on the host write path (identical definition).
+
+    Vectorized over the WHOLE buffer in place: the aligned prefix is a
+    zero-copy uint32 view (no pad-and-concatenate copy of the full
+    payload — this sits on the per-shard digest hot path of both
+    checkpoint pipelines); only the final partial block (< 8 KiB) is
+    padded.  Zero padding contributes nothing to either partial sum, so
+    the result is bit-identical to the padded-whole-buffer definition
+    the Pallas kernel and the jnp oracle implement."""
     raw = np.ascontiguousarray(data).view(np.uint8).ravel()
-    pad = (-raw.size) % (4 * BLOCK)
-    if pad:
-        raw = np.concatenate([raw, np.zeros(pad, np.uint8)])
-    words = raw.view("<u4").reshape(-1, BLOCK)
+    blk_bytes = 4 * BLOCK
+    n_full = raw.size - raw.size % blk_bytes
     idx = np.arange(BLOCK, dtype=np.uint32)
     with np.errstate(over="ignore"):
-        s1 = np.add.reduce(words, axis=-1, dtype=np.uint32)
-        s2 = np.add.reduce((words * idx).astype(np.uint32), axis=-1,
-                           dtype=np.uint32)
-        n = s1.shape[0]
-        pos = (np.arange(n, dtype=np.uint32) + np.uint32(1))
+        words = raw[:n_full].view("<u4").reshape(-1, BLOCK)
+        s1, s2 = _block_sums_np(words, idx)
+        if n_full < raw.size:  # pad ONLY the tail block
+            tail = np.zeros(blk_bytes, np.uint8)
+            tail[:raw.size - n_full] = raw[n_full:]
+            t1, t2 = _block_sums_np(tail.view("<u4").reshape(1, BLOCK), idx)
+            s1 = np.concatenate([s1, t1])
+            s2 = np.concatenate([s2, t2])
+        pos = (np.arange(s1.shape[0], dtype=np.uint32) + np.uint32(1))
         f1 = np.add.reduce(s1 * pos, dtype=np.uint32)
         f2 = np.add.reduce(s2 * pos * pos, dtype=np.uint32)
     return int(f1 ^ np.uint32((int(f2) << 1) & 0xFFFFFFFF))

@@ -1,7 +1,8 @@
 """The asynchronous incremental checkpoint pipeline (ISSUE 4 tentpole):
 snapshot codec chains + digest verification, writer-ack-gated commits,
-background writers, and cross-transport base+delta restore."""
-import json
+background writers, and cross-transport base+delta restore.  Snapshot
+blobs are BINARY containers since ISSUE 5 — the transport-free round
+trip is `image_to_bytes`/`image_from_bytes`, not JSON."""
 import threading
 import time
 
@@ -11,7 +12,9 @@ import pytest
 from repro.comm.transport.harness import run_world
 from repro.core.codec import (BASE_EPOCH_KEY, ChainPolicy, DeltaChainError,
                               ImageIntegrityError, IncrementalSnapshotter,
-                              SnapshotCodec, restore_rank_arrays)
+                              SnapshotCodec, blob_base_epoch,
+                              image_from_bytes, image_to_bytes,
+                              restore_rank_arrays, snap_meta)
 from repro.core.coordinator import Coordinator
 from repro.core.snapshot_writer import (ForkSnapshotWriter,
                                         ThreadSnapshotWriter,
@@ -28,15 +31,18 @@ def _arrays(seed=0, n=4096):
 # SnapshotCodec: chains, digests, typed errors
 # ---------------------------------------------------------------------------
 
-def test_snapshot_codec_full_roundtrip_json_safe():
+def test_snapshot_codec_full_roundtrip_transport_free():
     codec = SnapshotCodec()
     arrays = _arrays()
     blob = codec.encode(3, arrays, extra={"step": 9})
-    blob = json.loads(json.dumps(blob))  # transport-free by construction
-    out = codec.decode(blob)
+    assert isinstance(blob, bytes)  # inert bytes: transport-free
+    # the supervisor's round trip is the binary image container
+    img = image_from_bytes(image_to_bytes(
+        {"epoch": 3, "n_ranks": 1, "ranks": {0: blob}}))
+    out, extra = restore_rank_arrays(img, 0)
     for k in arrays:
         np.testing.assert_array_equal(out[k], arrays[k])
-    assert blob["encoding"] == "full" and blob["extra"]["step"] == 9
+    assert snap_meta(blob)["encoding"] == "full" and extra["step"] == 9
 
 
 def test_chain_policy_full_every_and_delta_sizes():
@@ -46,9 +52,9 @@ def test_chain_policy_full_every_and_delta_sizes():
     for e in range(1, 7):
         arrays["shard"] = arrays["shard"].copy()
         arrays["shard"][e * 8:(e * 8) + 4] += 1.0  # small-change step
-        blob = snapper.snapshot(e, arrays)
-        encodings.append(blob["encoding"])
-        sizes.append(blob["payload_bytes"])
+        meta = snap_meta(snapper.snapshot(e, arrays))
+        encodings.append(meta["encoding"])
+        sizes.append(meta["payload_bytes"])
     assert encodings == ["full", "delta", "delta", "full", "delta", "delta"]
     # incremental images measurably smaller on small-change steps
     assert max(s for s, enc in zip(sizes, encodings) if enc == "delta") \
@@ -62,30 +68,25 @@ def test_decode_chain_reconstructs_base_plus_deltas():
     for e in range(1, 5):
         arrays["shard"] = arrays["shard"] + np.float32(e)
         cuts[e] = arrays["shard"].copy()
-        blobs[e] = json.loads(json.dumps(snapper.snapshot(e, arrays)))
+        blobs[e] = snapper.snapshot(e, arrays)
     out = SnapshotCodec().decode_chain(blobs, 3)  # mid-chain epoch
     np.testing.assert_array_equal(out["shard"], cuts[3])  # bit-exact
 
 
 def test_corrupted_payload_is_typed_integrity_error():
     codec = SnapshotCodec()
-    blob = json.loads(json.dumps(codec.encode(1, _arrays())))
-    cell = blob["arrays"]["shard"]["payload"]
-    tampered = bytearray(cell["z"].encode())
-    tampered[10] = ord("A") if tampered[10] != ord("A") else ord("B")
-    cell["z"] = tampered.decode()
+    blob = bytearray(codec.encode(1, _arrays()))
+    blob[len(blob) // 2] ^= 0x40  # flip one payload bit
     with pytest.raises(ImageIntegrityError, match="digest|undecodable"):
-        codec.decode(blob)
+        codec.decode(bytes(blob))
 
 
 def test_truncated_payload_is_typed_integrity_error():
     codec = SnapshotCodec()
     blob = codec.encode(1, _arrays())
-    cell = blob["arrays"]["shard"]["payload"]
-    cell["nbytes"] += 1  # claims more bytes than the stream holds
-    # digest still matches the compressed bytes; the LENGTH check fires
+    # chopping the container tail removes payload the header claims
     with pytest.raises(ImageIntegrityError, match="truncated"):
-        codec.decode(blob)
+        codec.decode(blob[:-16])
 
 
 def test_missing_base_and_overlong_chain_are_chain_errors():
@@ -325,9 +326,8 @@ def test_async_pipeline_commits_and_collects_chained_image(transport):
     assert image is not None and len(image["ranks"]) == n
     # the newest committed epoch is a DELTA blob whose chain rides along
     blob = image["ranks"][0]
-    assert blob["encoding"] == "delta"
-    assert int(blob[BASE_EPOCH_KEY]) in {int(e) for e
-                                         in image["chains"][0]}
+    assert snap_meta(blob)["encoding"] == "delta"
+    assert blob_base_epoch(blob) in {int(e) for e in image["chains"][0]}
     arrays, extra = restore_rank_arrays(image, 2)
     assert arrays["shard"][0] == 2000.0 + 1.0  # rank 2 cut state
     assert extra["rank"] == 2
@@ -337,13 +337,13 @@ def test_async_pipeline_commits_and_collects_chained_image(transport):
                          [("inproc", "socket"), ("socket", "inproc")])
 def test_incremental_restore_crosses_transports(transport_a, transport_b):
     """A base+delta chain written under one backend reconstructs on a
-    fresh world over the other — through a JSON round trip, exactly
-    like the supervisor's restart path."""
+    fresh world over the other — through the binary image-container
+    round trip, exactly like the supervisor's restart path."""
     n = 4
     box = {}
     run_world(transport_a, n, _pipeline_worker(n), async_ckpt=True,
               timeout=120, on_running=lambda s: box.setdefault("s", s))
-    image = json.loads(json.dumps(box["s"].committed_image()))
+    image = image_from_bytes(image_to_bytes(box["s"].committed_image()))
 
     def restore_worker(ctx):
         arrays, extra = restore_rank_arrays(image, ctx.rank)
@@ -367,11 +367,10 @@ def test_corrupted_committed_image_raises_on_restore():
     box = {}
     run_world("inproc", n, _pipeline_worker(n), async_ckpt=True,
               timeout=120, on_running=lambda s: box.setdefault("s", s))
-    image = json.loads(json.dumps(box["s"].committed_image()))
-    blob = image["ranks"]["2"]
-    z = bytearray(blob["arrays"]["shard"]["payload"]["z"].encode())
-    z[8] = ord("A") if z[8] != ord("A") else ord("B")
-    blob["arrays"]["shard"]["payload"]["z"] = z.decode()
+    image = image_from_bytes(image_to_bytes(box["s"].committed_image()))
+    blob = bytearray(image["ranks"]["2"])
+    blob[-8] ^= 0x10  # flip one bit in rank 2's payload section
+    image["ranks"]["2"] = bytes(blob)
     with pytest.raises(ImageIntegrityError):
         restore_rank_arrays(image, 2)
     # other ranks' shards are independently verified and still restore

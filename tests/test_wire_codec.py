@@ -1,0 +1,471 @@
+"""Zero-copy binary data plane (ISSUE 5): frame format v2, binary
+snapshot containers, the JSON->binary migration shim, the committed
+image container, and the MANA_WIRE_V1 escape hatch.
+
+The fuzz contract: corrupt or truncated input raises the TYPED errors
+(`WireFormatError` for frames, `ImageError`/`ImageIntegrityError`/
+`DeltaChainError` for images) — never a raw struct/zlib/pickle/json
+traceback, which is what a restore path would otherwise surface as an
+undebuggable crash."""
+import json
+import zlib
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.comm.transport.base import CTRL_BASE, Message
+from repro.comm.transport.tcp import (FRAME_V2_LAYOUT, WIRE_VERSION,
+                                      FabricSwitch, SocketTransport,
+                                      WireFormatError, _decode, _eof_body,
+                                      _frame_parts, _hello_blob,
+                                      default_wire_version)
+from repro.core.codec import (DEFAULT_COMPRESS_LEVEL, ImageError,
+                              ImageIntegrityError, SnapshotCodec,
+                              encode_legacy_json, image_from_bytes,
+                              image_to_bytes, is_snap_blob, migrate_blob,
+                              migrate_image, restore_rank_arrays,
+                              snap_meta)
+
+IMG_ERRORS = (ImageError,)          # every image fault is a subclass
+_DTYPES = ("float32", "float64", "int8", "int16", "int32", "int64",
+           "uint8", "uint32")
+
+
+# ---------------------------------------------------------------------------
+# frame v2
+# ---------------------------------------------------------------------------
+
+def _roundtrip(src, dst, tag, vtime, payload):
+    m = Message(src, dst, tag, payload)
+    m.vtime = vtime
+    hdr, pl = _frame_parts(m, 2)
+    body = hdr[4:] + pl     # what the reader hands over, minus the len
+    out = _decode(body, 2)
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 1 << 20), st.integers(0, 1 << 20),
+       st.integers(CTRL_BASE - 3, 1 << 30), st.integers(0, 1 << 40),
+       st.integers(0, 512))
+def test_frame_v2_fuzz_roundtrip(src, dst, tag, vtime_ns, nbytes):
+    """Exact round trip over the full field ranges — ctrl tags are
+    large negatives and must survive the s64 header field."""
+    payload = bytes((i * 7) & 0xFF for i in range(nbytes))
+    vtime = vtime_ns * 1e-9
+    out = _roundtrip(src, dst, tag, vtime, payload)
+    assert (out.src, out.dst, out.tag, out.payload) == (src, dst, tag,
+                                                        payload)
+    assert out.vtime == vtime
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 23))
+def test_frame_v2_truncation_is_typed(cut):
+    """A body shorter than the 24-byte v2 header is a WireFormatError,
+    never a struct.error."""
+    m = Message(1, 2, -5, b"payload")
+    hdr, pl = _frame_parts(m, 2)
+    body = (hdr[4:] + pl)[:cut]
+    with pytest.raises(WireFormatError):
+        _decode(body, 2)
+
+
+def test_frame_v1_garbage_is_typed():
+    with pytest.raises(WireFormatError):
+        _decode(b"\x00\x00\x00\x07not-a-pickle", 1)
+
+
+def test_frame_v2_header_is_o1_in_payload():
+    """The v2 encode hands the payload through by reference — the
+    header is the only new allocation (the zero-copy tentpole claim)."""
+    payload = bytes(1 << 20)
+    m = Message(0, 1, 3, payload)
+    hdr, out_payload = _frame_parts(m, 2)
+    assert out_payload is payload   # no copy
+    assert len(hdr) == 28
+
+
+def test_frame_layout_covers_header():
+    sized = [f for f in FRAME_V2_LAYOUT if f[1] is not None]
+    assert sum(f[1] for f in sized) == 28
+    assert [f[0] for f in FRAME_V2_LAYOUT] == [
+        "len", "dst", "src", "tag", "vtime", "payload"]
+
+
+def test_prepacked_ctrl_frames_are_cached():
+    """HELLO and the synthesized EOF reuse one pre-packed buffer per
+    (rank, version) instead of re-pickling per connection."""
+    assert _hello_blob(3, 2) is _hello_blob(3, 2)
+    assert _eof_body(7, 64, 2) is _eof_body(7, 64, 2)
+    assert _eof_body(7, 64, 2) != _eof_body(8, 64, 2)
+
+
+# ---------------------------------------------------------------------------
+# wire version negotiation + MANA_WIRE_V1 escape hatch
+# ---------------------------------------------------------------------------
+
+def test_default_wire_version_env(monkeypatch):
+    monkeypatch.delenv("MANA_WIRE_V1", raising=False)
+    assert default_wire_version() == WIRE_VERSION == 2
+    monkeypatch.setenv("MANA_WIRE_V1", "1")
+    assert default_wire_version() == 1
+
+
+def test_wire_version_mismatch_fails_loudly():
+    """An old/new switch pairing is a connect-time error on the client,
+    never silent frame corruption."""
+    switch = FabricSwitch(coord_rank=2, wire_version=2)
+    try:
+        with pytest.raises(WireFormatError, match="version mismatch"):
+            SocketTransport(2, 0, switch.addr, wire_version=1)
+    finally:
+        switch.close()
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_socket_fifo_and_ctrl_over_both_wire_versions(version):
+    """Conformance arm over both frame formats: per-(src, tag) FIFO and
+    a coordinator-style ctrl round trip hold on v1 and v2 alike."""
+    import pickle
+
+    from repro.comm.transport.base import TAG_CTRL
+    switch = FabricSwitch(coord_rank=2, wire_version=version)
+    t0 = t1 = None
+    try:
+        t0 = SocketTransport(2, 0, switch.addr, wire_version=version)
+        t1 = SocketTransport(2, 1, switch.addr, wire_version=version)
+        for i in range(16):
+            t0.endpoint.send(1, f"m{i}".encode(), tag=5)
+        got = [t1.endpoint.recv(0, 5, timeout=10).payload
+               for i in range(16)]
+        assert got == [f"m{i}".encode() for i in range(16)]
+        t1.endpoint.send(0, pickle.dumps({"op": "park", "rank": 1}),
+                         TAG_CTRL)
+        req = pickle.loads(t0.endpoint.recv(None, TAG_CTRL,
+                                            timeout=10).payload)
+        assert req == {"op": "park", "rank": 1}
+    finally:
+        for t in (t0, t1):
+            if t is not None:
+                t.close()
+        switch.close()
+
+
+def test_wire_v1_escape_hatch_world(monkeypatch):
+    """MANA_WIRE_V1=1 runs a whole world on the deprecated v1 framing
+    (the CI matrix cell exercises the same path multi-process)."""
+    monkeypatch.setenv("MANA_WIRE_V1", "1")
+    from repro.comm.transport import create_world
+    w = create_world("socket", 2)
+    try:
+        assert w._clients[0].wire_version == 1
+        w.endpoints[0].send(1, b"over-v1", tag=3)
+        assert w.endpoints[1].recv(0, 3, timeout=10).payload == b"over-v1"
+    finally:
+        w.close()
+
+
+# ---------------------------------------------------------------------------
+# binary snapshot containers: fuzz round trip + typed corruption
+# ---------------------------------------------------------------------------
+
+def _rand_arrays(rng, n_arrays):
+    out = {}
+    for i in range(n_arrays):
+        dtype = np.dtype(_DTYPES[rng.randint(len(_DTYPES))])
+        shape = tuple(rng.randint(1, 9)
+                      for _ in range(rng.randint(0, 3))) or (rng.randint(1, 257),)
+        if dtype.kind == "f":
+            arr = (rng.randn(*shape) * 100).astype(dtype)
+        else:
+            arr = rng.randint(0, 100, shape).astype(dtype)
+        out[f"a{i}"] = arr
+    return out
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.booleans(),
+       st.sampled_from([0, 1, 6, 9]))
+def test_binary_cells_fuzz_roundtrip(seed, n_arrays, with_base, level):
+    """Random dtypes/shapes round-trip bit-exactly through full AND
+    delta containers at every compression level."""
+    rng = np.random.RandomState(seed)
+    codec = SnapshotCodec(compress_level=level)
+    arrays = _rand_arrays(rng, n_arrays)
+    base = None
+    base_arrays = None
+    if with_base:
+        base_arrays = {k: v + v.dtype.type(1) for k, v in arrays.items()}
+        base = (1, base_arrays)
+    blob = codec.encode(2, arrays, base=base, extra={"seed": seed})
+    assert is_snap_blob(blob)
+    out = codec.decode(blob, base_arrays=base_arrays)
+    for k, v in arrays.items():
+        np.testing.assert_array_equal(out[k], v)
+        assert out[k].dtype == v.dtype and out[k].shape == v.shape
+    assert codec.decode_extra(blob) == {"seed": seed}
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 1000), st.integers(0, 1 << 16))
+def test_binary_cells_fuzz_corruption_is_typed(seed, pos):
+    """A single-byte flip ANYWHERE in the container (header or payload)
+    is a typed ImageError subclass, never a struct/zlib/json traceback
+    — and never a silently-wrong decode (the header carries its own
+    digest)."""
+    rng = np.random.RandomState(seed)
+    codec = SnapshotCodec()
+    arrays = _rand_arrays(rng, 2)
+    blob = bytearray(codec.encode(1, arrays, extra={"s": seed}))
+    blob[pos % len(blob)] ^= (1 << (seed % 8)) or 1
+    try:
+        out = codec.decode(bytes(blob))
+        # a flip that decodes must be a no-op flip (xor with 0 excluded
+        # above, so only possible if it hit truly dead padding bytes)
+        for k, v in arrays.items():
+            np.testing.assert_array_equal(out[k], v)
+    except IMG_ERRORS:
+        pass  # the contract: typed, catchable, diagnosable
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 2000))
+def test_binary_cells_fuzz_truncation_is_typed(seed, cut):
+    rng = np.random.RandomState(seed)
+    blob = SnapshotCodec().encode(1, _rand_arrays(rng, 2))
+    with pytest.raises(IMG_ERRORS):
+        SnapshotCodec().decode(blob[:max(0, len(blob) - cut)])
+
+
+def test_not_a_container_is_typed():
+    with pytest.raises(ImageError):
+        SnapshotCodec().decode(b"definitely not a snapshot container")
+    with pytest.raises(IMG_ERRORS):
+        SnapshotCodec().decode(b"")
+
+
+def test_compress_level_is_threaded_and_lossless():
+    """SnapshotCodec(compress_level=) changes the encoded stream (so
+    the knob is real) but never the decoded arrays."""
+    rng = np.random.RandomState(0)
+    arrays = {"w": np.repeat(rng.randn(512).astype(np.float32), 8)}
+    blobs = {lvl: SnapshotCodec(compress_level=lvl).encode(1, arrays)
+             for lvl in (0, 1, 9)}
+    assert len(blobs[9]) < len(blobs[0])
+    for blob in blobs.values():
+        np.testing.assert_array_equal(
+            SnapshotCodec().decode(blob)["w"], arrays["w"])
+
+
+def test_quantize_cells_roundtrip_binary():
+    from repro.kernels.quantize import ref as quant_ref
+    rng = np.random.RandomState(3)
+    arrays = {"opt_m": rng.randn(2 * quant_ref.QBLOCK).astype(np.float32)}
+    codec = SnapshotCodec(quantize_keys=("opt_m",))
+    out = codec.decode(codec.encode(1, arrays))
+    q, s, pad = quant_ref.quantize_np(arrays["opt_m"])
+    expect = quant_ref.dequantize_np(q, s, pad, arrays["opt_m"].shape,
+                                     np.float32)
+    np.testing.assert_array_equal(out["opt_m"], expect)
+
+
+# ---------------------------------------------------------------------------
+# JSON -> binary migration shim (format 1 images keep restoring)
+# ---------------------------------------------------------------------------
+
+def _legacy_chain(rng):
+    """A format-1 (zlib+base64-in-JSON) base+delta chain, JSON round
+    tripped exactly like an old committed image on disk."""
+    a1 = {"w": rng.randn(256).astype(np.float32),
+          "c": np.arange(32, dtype=np.int64)}
+    a2 = {k: v + v.dtype.type(1) for k, v in a1.items()}
+    b1 = encode_legacy_json(1, a1, extra={"step": 1})
+    b2 = encode_legacy_json(2, a2, base=(1, a1), extra={"step": 2})
+    return a2, json.loads(json.dumps(b1)), json.loads(json.dumps(b2))
+
+
+def test_migrate_blob_preserves_streams_and_digests():
+    rng = np.random.RandomState(1)
+    cut, b1, b2 = _legacy_chain(rng)
+    m1 = migrate_blob(b1)
+    assert is_snap_blob(m1)
+    meta = snap_meta(m1)
+    assert meta["migrated_from"] == 1
+    # digests carried over verbatim: migration never recompresses
+    assert (meta["arrays"]["w"]["payload"]["digest"]
+            == b1["arrays"]["w"]["payload"]["digest"])
+    out = SnapshotCodec().decode(m1)
+    np.testing.assert_array_equal(out["c"], np.arange(32, dtype=np.int64))
+    assert SnapshotCodec().decode_extra(m1) == {"step": 1}
+
+
+def test_legacy_dict_blobs_decode_transparently():
+    """decode() migrates format-1 dicts on the fly — an old image
+    restores without the caller knowing about formats."""
+    rng = np.random.RandomState(2)
+    cut, b1, b2 = _legacy_chain(rng)
+    out = SnapshotCodec().decode_chain({1: b1, 2: b2}, 2)
+    np.testing.assert_array_equal(out["w"], cut["w"])
+
+
+def test_restore_rank_arrays_from_legacy_committed_image():
+    """End to end: a committed image whose blobs are all format-1 JSON
+    (an older run's supervisor file) restores through the same entry
+    point new images use — with and without the one-shot migrate."""
+    rng = np.random.RandomState(4)
+    cut, b1, b2 = _legacy_chain(rng)
+    image = {"epoch": 2, "n_ranks": 1, "ranks": {"0": b2},
+             "chains": {"0": {"1": b1}}}
+    arrays, extra = restore_rank_arrays(image, 0)
+    np.testing.assert_array_equal(arrays["w"], cut["w"])
+    assert extra == {"step": 2}
+    migrated = migrate_image(image)
+    assert all(is_snap_blob(b) for b in migrated["ranks"].values())
+    arrays2, _ = restore_rank_arrays(migrated, 0)
+    np.testing.assert_array_equal(arrays2["w"], cut["w"])
+    # and the migrated image serializes into the binary container
+    rt = image_from_bytes(image_to_bytes(migrated))
+    np.testing.assert_array_equal(restore_rank_arrays(rt, 0)[0]["w"],
+                                  cut["w"])
+
+
+def test_migrate_blob_with_unsorted_legacy_arrays():
+    """Review regression: a legacy blob whose arrays dict is NOT
+    key-sorted (externally re-serialized image) must migrate with
+    streams aligned to the sorted header order."""
+    rng = np.random.RandomState(9)
+    arrays = {"w": rng.randn(64).astype(np.float32),
+              "b": np.arange(8, dtype=np.int64)}
+    legacy = encode_legacy_json(1, arrays)
+    # rebuild the arrays dict in REVERSED key order
+    legacy["arrays"] = {k: legacy["arrays"][k]
+                        for k in sorted(legacy["arrays"], reverse=True)}
+    out = SnapshotCodec().decode(migrate_blob(legacy))
+    for k, v in arrays.items():
+        np.testing.assert_array_equal(out[k], v)
+
+
+def test_collector_tolerates_non_dict_app_blobs():
+    """Review regression: blob_base_epoch must treat ANY JSON-safe app
+    blob (list, str, None, int) as chainless — an exception here would
+    detonate inside the collector's snap handler and desync the rank's
+    ctrl reply FIFO."""
+    from repro.core.codec import blob_base_epoch
+    for blob in (["a", "b"], "blob", None, 7, {"step": 3}, b"rawbytes"):
+        assert blob_base_epoch(blob) is None
+    blob = SnapshotCodec().encode(
+        2, {"w": np.zeros(4, np.float32)},
+        base=(1, {"w": np.ones(4, np.float32)}))
+    assert blob_base_epoch(blob) == 1
+
+
+def test_legacy_corruption_still_typed():
+    rng = np.random.RandomState(5)
+    _, b1, _ = _legacy_chain(rng)
+    b1["arrays"]["w"]["payload"]["z"] = "!!!not-base64!!!"
+    with pytest.raises(ImageIntegrityError):
+        SnapshotCodec().decode(b1)
+
+
+# ---------------------------------------------------------------------------
+# committed-image container
+# ---------------------------------------------------------------------------
+
+def test_image_container_mixes_binary_and_dict_blobs():
+    """The supervisor's unit: binary snapshot blobs ride in the blob
+    section, JSON-safe app dicts inline — both come back intact."""
+    blob = SnapshotCodec().encode(1, {"w": np.ones(8, np.float32)})
+    image = {"epoch": 1, "n_ranks": 2,
+             "ranks": {0: blob, 1: {"step": 7, "agent": {"x": [1, 2]}}}}
+    out = image_from_bytes(image_to_bytes(image))
+    assert out["epoch"] == 1
+    assert out["ranks"]["1"] == {"step": 7, "agent": {"x": [1, 2]}}
+    np.testing.assert_array_equal(
+        SnapshotCodec().decode(out["ranks"]["0"])["w"],
+        np.ones(8, np.float32))
+
+
+def test_image_container_rejects_live_state():
+    """Transport-free by construction: a blob smuggling a live object
+    fails loudly at serialization time."""
+    image = {"epoch": 1, "n_ranks": 1, "ranks": {0: {"sock": object()}}}
+    with pytest.raises(TypeError):
+        image_to_bytes(image)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 1 << 16), st.integers(0, 7))
+def test_image_container_corruption_is_typed(pos, bit):
+    blob = SnapshotCodec().encode(1, {"w": np.zeros(64, np.float32)})
+    data = bytearray(image_to_bytes({"epoch": 1, "n_ranks": 1,
+                                     "ranks": {0: blob}}))
+    data[pos % len(data)] ^= (1 << bit)
+    try:
+        out = image_from_bytes(bytes(data))
+        restore_rank_arrays(out, 0)
+    except IMG_ERRORS:
+        pass
+    else:
+        # survived = the flip was absorbed by a digest-protected layer
+        # re-verifying clean (xor could hit the flipped bit of a dead
+        # byte only if the flip restored the original, impossible here)
+        pytest.fail("corrupted image container decoded without error")
+
+
+def test_deprecated_v1_logs_once(monkeypatch, capsys):
+    import repro.comm.transport.tcp as tcp
+    monkeypatch.setenv("MANA_WIRE_V1", "1")
+    monkeypatch.setattr(tcp, "_warned_v1", False)
+    tcp.default_wire_version()
+    tcp.default_wire_version()
+    err = capsys.readouterr().err
+    assert err.count("DEPRECATED") == 1
+
+
+def test_checkpoint_manager_compress_level():
+    import tempfile
+
+    from repro.core.checkpoint import CheckpointManager
+    rng = np.random.RandomState(0)
+    state = {"w": np.repeat(rng.randn(1024).astype(np.float32), 4)}
+    sizes = {}
+    for lvl in (0, 9):
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d, compress=True, compress_level=lvl)
+        sizes[lvl] = mgr.save(1, state)["bytes"]
+        out, _ = mgr.restore(1)
+        np.testing.assert_array_equal(out["w"], state["w"])
+    assert sizes[9] < sizes[0]
+
+
+def test_zlib_tracebacks_never_escape():
+    """A stream whose digest was recomputed after tampering (the
+    hardest corruption) still surfaces as ImageIntegrityError when
+    zlib chokes — the decoder wraps zlib.error."""
+    from repro.core import codec as C
+    codec = SnapshotCodec()
+    blob = bytearray(codec.encode(1, {"w": np.zeros(16, np.float32)}))
+    meta, off, mv = C._snap_header(bytes(blob))
+    # overwrite the first stream with garbage of the same length, then
+    # fix up its digest so the digest check passes and zlib runs
+    cell = meta["arrays"]["w"]["payload"]
+    zn = cell["zn"]
+    garbage = bytes((7 * i + 1) & 0xFF for i in range(zn))
+    start = off + 4
+    blob[start:start + zn] = garbage
+    cell["digest"] = C.shard_digest(garbage)
+    hjson = json.dumps(meta, sort_keys=True,
+                       separators=(",", ":")).encode()
+    rebuilt = (C._SNAP_HDR.pack(C._SNAP_MAGIC, C.SNAP_FORMAT, len(hjson),
+                                C.shard_digest(hjson))
+               + hjson + bytes(blob[off:]))
+    with pytest.raises(ImageIntegrityError, match="undecodable|truncated"):
+        codec.decode(rebuilt)
+    with pytest.raises(zlib.error):
+        zlib.decompress(garbage)  # the raw error the wrapper hides
