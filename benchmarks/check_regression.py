@@ -8,6 +8,10 @@ default, the PR-1 acceptance bound):
   * 64-rank tree collective rate   (rate must not shrink > FACTOR)
   * 64-rank ASYNC checkpoint stall (wall us must not grow > FACTOR vs
     the committed baseline — "async ckpt_stall no worse than today")
+  * same-world restore latency (ISSUE 6: the (64, 64) identity
+    elastic_restore_latency record must stay <= 1.1x baseline + 5ms
+    slack — routing every restart through the unified restore_world
+    path may not slow the common case down)
 
 It also enforces the tentpole claims themselves, machine-relatively
 (the compared numbers come from the SAME fresh run, so host speed
@@ -58,6 +62,7 @@ _COVERED = {
     "ckpt_image_bytes": ("n", "encoding"),
     "wire_codec_throughput": ("codec", "payload_kb"),
     "image_codec_throughput": ("codec", "level"),
+    "elastic_restore_latency": ("n_from", "n_to"),
 }
 
 
@@ -210,6 +215,27 @@ def main() -> int:
             failures.append(
                 f"binary snapshot images are {r:.3f}x the JSON/base64 "
                 f"baseline (required <= {args.image_bytes_factor}x)")
+
+    # ISSUE 6: same-world restarts now go through the unified
+    # restore_world path — the (64, 64) identity record must stay
+    # within 1.1x the committed baseline (+5ms absolute slack so a
+    # noisy-but-fast host cannot fail on scheduler jitter).  The
+    # N != M elastic pairs are covered by _COVERED but not rated:
+    # there was no elastic restore before this record existed.
+    b_same = _match(base, name="elastic_restore_latency",
+                    n_from=GUARD_N, n_to=GUARD_N)
+    c_same = _match(cur, name="elastic_restore_latency",
+                    n_from=GUARD_N, n_to=GUARD_N)
+    if b_same and c_same:
+        b_us = b_same[0]["restore_us"]
+        c_us = c_same[0]["restore_us"]
+        print(f"elastic restore  n={GUARD_N}->{GUARD_N}: baseline "
+              f"{b_us:.0f}us, current {c_us:.0f}us ({c_us / b_us:.2f}x)")
+        if c_us > max(1.1 * b_us, b_us + 5000):
+            failures.append(
+                f"same-world restore latency regressed "
+                f"{c_us / b_us:.2f}x vs baseline (limit 1.1x + 5ms "
+                f"slack): {b_us:.0f}us -> {c_us:.0f}us")
 
     # coverage: guarded-name records in the baseline may not silently
     # vanish from the current artifact (e.g. the 512-rank arms)

@@ -14,6 +14,10 @@ simulated fabric (CSV rows; collected by benchmarks.run).
   recovery_latency — supervised chaos recovery: one injected rank
       kill, detection -> restarted-world-running latency and the
       end-to-end supervised wall time (ISSUE 3).
+  elastic_restore_latency — launcher-side restore_world + RestorePlan
+      remap + logical-axis reshard CPU time per (n_from, n_to) pair
+      (ISSUE 6).  Guarded: the (64, 64) identity pair must stay within
+      1.1x the committed baseline; N != M pairs are baselined.
   transport_collective_rates — the fig4 harness run through the world
       harness on a NAMED transport backend (one OS process per rank
       for "socket"), emitting records tagged with the transport.  The
@@ -297,20 +301,19 @@ def recovery_latency(transport: str = "inproc", n: int = 8,
     the world from the last committed image.  Reports wall-clock
     detection->running recovery latency and the end-to-end supervised
     wall time — the operational cost of surviving a rank failure."""
+    from repro import restore_world
     from repro.comm.transport import FaultPlan
-    from repro.comm.transport.harness import (restore_agent_from_blob,
-                                              run_world_supervised)
+    from repro.comm.transport.harness import run_world_supervised
 
     def fn_factory(attempt, image):
-        snaps = None if image is None else image["ranks"]
+        rw = None if image is None else restore_world(image)
 
         def work(ctx):
             a, r = ctx.agent, ctx.rank
-            if snaps is None:
+            if rw is None:
                 start, recvd = 0, 0
             else:
-                blob = snaps[str(r)]
-                restore_agent_from_blob(ctx, blob["agent"])
+                blob = rw.bind(ctx)[r]
                 for vid, ranks in a.comms.active().items():
                     if tuple(ranks) == tuple(range(ctx.n)):
                         a.world_comm = vid
@@ -372,6 +375,73 @@ def recovery_latency(transport: str = "inproc", n: int = 8,
                         "n": n, "recovery_s": rec_s,
                         "supervised_wall_s": wall_s,
                         "image_epoch": sup.failures[0]["image_epoch"]})
+    return rows
+
+
+def elastic_restore_latency(pairs=((64, 64), (64, 61), (61, 64), (8, 3)),
+                            shard_kb: int = 64, repeats: int = 5,
+                            results: Optional[List[Dict]] = None) -> List[str]:
+    """ISSUE 6: launcher-side cost of the elastic restore plane — the
+    binary image container decode (`restore_world`), the `RestorePlan`
+    remap of every per-rank protocol blob (comm memberships, collective
+    counts, drain backlog), and the logical-axis reshard of the array
+    state onto the target world.  All of it sits on the critical
+    restart path BEFORE any rank runs, so it is measured as pure CPU
+    wall time per (n_from, n_to) pair, best of `repeats`.
+
+    The (64, 64) identity pair is the guarded record: the unified
+    restore_world path must not make same-world restarts slower (ISSUE
+    6 acceptance: <= 1.1x the committed baseline).  The N != M pairs
+    are baselined for coverage/trend only — there was no elastic
+    restore before this record existed."""
+    import numpy as np
+
+    from repro import RestorePlan, restore_world
+    from repro.core.codec import (SnapshotCodec, image_from_bytes,
+                                  image_to_bytes)
+    from repro.core.virtual import comm_gid
+
+    rows = []
+    for n_from, n_to in pairs:
+        codec = SnapshotCodec()
+        per = shard_kb * 1024 // 8        # float64 elements per rank
+        full = np.arange(per * n_from, dtype=np.float64)
+        world = tuple(range(n_from))
+        ranks = {}
+        for r in range(n_from):
+            agent = {"rank": r, "transport": "inproc",
+                     "comms": {"comms": {"1": list(world)}, "next": 2},
+                     "requests": {"requests": {}, "next": 1},
+                     "coll_counts": {str(comm_gid(world)): 7},
+                     "drain_buffer": [((r - 1) % n_from, r, 0, "ab" * 32)]}
+            ranks[str(r)] = codec.encode(1, {
+                "x": full[r * per:(r + 1) * per],
+                "rep": np.zeros(16)},
+                extra={"step": 3, "logical": {"x": ["batch"], "rep": []},
+                       "agent": agent})
+        blob = image_to_bytes({"epoch": 1, "n_ranks": n_from,
+                               "ranks": ranks})
+        plan = RestorePlan.between(n_from, n_to)
+        best = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            rw = restore_world(image_from_bytes(blob), plan)
+            shards = rw.reshard()
+            remapped = [rw.plan.remap_agent_blob(rw.agent_blob(o))
+                        for o in range(n_from)]
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        assert len(shards) == len(remapped[0]["comms"]["comms"]["1"]) == n_to
+        np.testing.assert_array_equal(
+            np.concatenate([s["x"] for s in shards]), full)
+        us = 1e6 * best
+        rows.append(f"elastic_restore_n{n_from}to{n_to},{us:.0f},"
+                    f"shard_kb={shard_kb}")
+        if results is not None:
+            results.append({"name": "elastic_restore_latency",
+                            "transport": "inproc", "n_from": n_from,
+                            "n_to": n_to, "shard_kb": shard_kb,
+                            "restore_us": us})
     return rows
 
 

@@ -71,6 +71,10 @@ def main() -> None:
             ranks=(4, 8, 64), results=results)
         rows += protocol_benchmarks.recovery_latency(
             "inproc", results=results)
+        # the ISSUE-6 guarded record: same-world restore via the
+        # unified restore_world path (64,64) + elastic N!=M pairs
+        rows += protocol_benchmarks.elastic_restore_latency(
+            results=results)
         # the ISSUE-4 guarded records: stall sync vs async + image
         # bytes full vs delta at the 64-rank guard point
         rows += protocol_benchmarks.checkpoint_pipeline(
@@ -103,6 +107,10 @@ def main() -> None:
             results=results)
         rows += protocol_benchmarks.recovery_latency(
             "inproc", results=results)
+        rows += protocol_benchmarks.elastic_restore_latency(
+            pairs=((8, 8), (8, 3)) if quick
+            else ((64, 64), (64, 61), (61, 64), (8, 3)),
+            results=results)
         rows += protocol_benchmarks.checkpoint_pipeline(
             "inproc", ranks=(8,) if quick else (64, 256),
             results=results)

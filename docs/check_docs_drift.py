@@ -15,6 +15,10 @@ Checks (each also run as a tier-1 test via tests/test_docs.py):
   4. docs/quickstart.sh's commands all appear verbatim in the README —
      the quickstart is the README's run instructions in executable
      form, so the README cannot document commands CI never runs.
+  5. PROTOCOL.md's image-container-fields table == the registry
+     `repro.core.codec.IMAGE_FIELDS` (ISSUE 6: the `n_ranks` and
+     `remap` fields the elastic restore path depends on stay
+     documented in lockstep with the code).
 
 Usage:  python docs/check_docs_drift.py   (exit 1 on any drift)
 """
@@ -122,6 +126,28 @@ def check_frame_format_table() -> list:
     return errors
 
 
+def check_image_container_fields() -> list:
+    """PROTOCOL.md image-container table vs repro.core.codec.IMAGE_FIELDS."""
+    from repro.core.codec import IMAGE_FIELDS
+    errors = []
+    text = _read("docs", "PROTOCOL.md")
+    anchor = "## Image container fields"
+    if anchor not in text:
+        return [f"PROTOCOL.md is missing the {anchor!r} section"]
+    doc = set()
+    for cells in _md_table_rows(text, anchor):
+        m = re.match(r"`([a-z_]+)`", cells[0])
+        if m:
+            doc.add(m.group(1))
+    for f in sorted(set(IMAGE_FIELDS) - doc):
+        errors.append(f"PROTOCOL.md image-container table is missing "
+                      f"field {f!r} (present in codec.IMAGE_FIELDS)")
+    for f in sorted(doc - set(IMAGE_FIELDS)):
+        errors.append(f"PROTOCOL.md documents unknown image field {f!r} "
+                      f"(absent from codec.IMAGE_FIELDS)")
+    return errors
+
+
 def check_example_flags() -> list:
     """README 'Example flags' table + example epilog vs the parser."""
     import multirank_simulation as sim
@@ -176,8 +202,8 @@ def check_architecture_linked() -> list:
 
 
 CHECKS = (check_protocol_op_table, check_frame_format_table,
-          check_example_flags, check_quickstart_in_readme,
-          check_architecture_linked)
+          check_image_container_fields, check_example_flags,
+          check_quickstart_in_readme, check_architecture_linked)
 
 
 def main() -> int:

@@ -14,13 +14,16 @@ export PYTHONPATH=src
 export MANA_DEMO_RANKS="${MANA_DEMO_RANKS:-16}"
 
 # checkpoint under threads, restore under one-process-per-rank TCP
-python examples/multirank_simulation.py --quick --transport-a inproc --transport-b socket
+python examples/multirank_simulation.py --quick --transport inproc --restore-to @socket
 
 # the same round trip on the asynchronous incremental pipeline
 python examples/multirank_simulation.py --quick --async-ckpt
 
 # supervised chaos: seeded rank kills + auto-restart from the image
 python examples/multirank_simulation.py --chaos --quick --seed 7
+
+# elastic chaos: shrink to the survivors, then grow back (ISSUE 6)
+python examples/multirank_simulation.py --elastic --quick --seed 7
 
 # the example's flag surface (drift-guarded against the README table)
 python examples/multirank_simulation.py --help

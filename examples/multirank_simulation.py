@@ -2,7 +2,7 @@
 hybrid two-phase-commit — the paper's signature network-agnosticism
 scenario on the pluggable transport layer.
 
-Phase A runs an N-rank job over transport A with pipelined ring p2p
+Phase A runs an N-rank job over one transport with pipelined ring p2p
 (receives lag sends, so messages are ALWAYS in flight at the checkpoint
 cut) plus per-row tree allreduces, with one rank straggling while the
 checkpoint is pending (watch the coordinator's straggler report name
@@ -13,24 +13,33 @@ snapshots to a JSON checkpoint IMAGE — transport-free by construction:
 membership, counters and hex payloads only, no sockets, no locks.
 
 The phase-A world is then torn down completely and a fresh world is
-bootstrapped over transport B *from the image file alone* — the paper's
-"lower half rebuilt from scratch": virtual comm tables rebound onto new
-endpoints, drained messages re-delivered on the new network.  Every
-rank first replays its backlog out of the drain buffer — sequence
-numbers must continue exactly where the cut happened — then runs a
-second traffic epoch including a SECOND checkpoint, proving the
-restored world drains and commits too.
+bootstrapped *from the image file alone* for every `--restore-to`
+spec — a different transport, a different WORLD SIZE, or both — through
+the one public entrypoint `repro.restore_world(image, plan)`: virtual
+comm tables rebound onto new endpoints under the plan's old->new rank
+remapping, array shards round-tripped through their logical axes,
+drained messages re-delivered on the new network.  Same-size restores
+additionally assert ring sequence numbers continue exactly where the
+cut happened; every restored world then runs a second traffic epoch
+including a SECOND checkpoint, proving the restored world drains and
+commits too.
+
+`--chaos` adds seeded rank kills + supervised auto-restart; `--elastic`
+is the production autoscaling story: kill 3 of 64 mid-run, resume at 61
+from the committed 64-rank image (arrays resharded, protocol state
+remapped), lose one more, then grow back to 64 — with the surviving
+work bit-identical throughout.
 
 Transports (see `repro.comm.transport`):
   inproc — every rank a thread in one process (reference backend)
   socket — every rank a separate OS process over loopback TCP
 
     PYTHONPATH=src python examples/multirank_simulation.py \
-        [--quick] [--ranks N] [--transport-a inproc] [--transport-b socket]
+        [--quick] [--ranks N] [--transport inproc] [--restore-to N@socket]
 
 Defaults: 256 ranks (32 with --quick; MANA_DEMO_RANKS=<n> overrides),
 inproc -> inproc.  The CI transport matrix runs inproc -> socket and
-socket -> inproc at 64 ranks.
+socket -> inproc at 64 ranks; the CI elastic arm runs --elastic on both.
 """
 import argparse
 import json
@@ -42,9 +51,11 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import numpy as np
+
+from repro import RestorePlan, parse_restore_spec, restore_world
 from repro.comm.transport import FaultPlan, available_transports
-from repro.comm.transport.harness import (restore_agent_from_blob,
-                                          row_width, run_world,
+from repro.comm.transport.harness import (row_width, run_world,
                                           run_world_supervised)
 from repro.core.codec import DEFAULT_COMPRESS_LEVEL, SnapshotCodec
 
@@ -68,12 +79,17 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--ranks", type=int, default=None,
                    help="world size (default: 256, or 32 with --quick; "
                         "chaos mode: 64 / 16; MANA_DEMO_RANKS overrides)")
-    p.add_argument("--transport-a", default="inproc",
+    p.add_argument("--transport", default=None,
                    choices=available_transports(),
-                   help="transport the job is checkpointed under")
-    p.add_argument("--transport-b", default="inproc",
-                   choices=available_transports(),
-                   help="transport the job is restored under")
+                   help="transport the job launches (and is checkpointed) "
+                        "under; default inproc")
+    p.add_argument("--restore-to", action="append", default=None,
+                   metavar="N@TRANSPORT",
+                   help="restore spec, repeatable: N@transport, N (same "
+                        "transport) or @transport (same world size) — "
+                        "each spec restores the phase-A image into a "
+                        "fresh world; chaos mode: transports here set "
+                        "the restart transport cycle")
     p.add_argument("--image", default=None,
                    help="checkpoint image path (default: a temp file)")
     p.add_argument("--async-ckpt", action="store_true",
@@ -89,16 +105,28 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--chaos", action="store_true",
                    help="supervised chaos mode: seeded rank kills + "
                         "auto-restart from the last committed image")
+    p.add_argument("--elastic", action="store_true",
+                   help="elastic chaos (implies --chaos): kill ranks, "
+                        "resume at the SURVIVING world size from the "
+                        "committed image (arrays resharded, protocol "
+                        "state remapped), then grow back to full size")
     p.add_argument("--seed", type=int, default=0,
                    help="chaos fault-schedule seed (reproduces exactly)")
     p.add_argument("--kills", type=int, default=CHAOS_KILLS,
                    help="number of injected rank kills to survive")
-    p.add_argument("--flip-transport", action="store_true",
-                   help="chaos restarts alternate between transport-a "
-                        "and transport-b (cross-backend recovery)")
     p.add_argument("--log-dir", default=None,
                    help="chaos mode: write attempt records, the failing "
                         "seed and the last image here (CI artifacts)")
+    # ---- deprecated spellings (kept working; see resolve_restore_flags)
+    p.add_argument("--transport-a", default=None,
+                   choices=available_transports(),
+                   help="DEPRECATED alias of --transport")
+    p.add_argument("--transport-b", default=None,
+                   choices=available_transports(),
+                   help="DEPRECATED: use --restore-to @TRANSPORT")
+    p.add_argument("--flip-transport", action="store_true",
+                   help="DEPRECATED: chaos restarts alternate transports; "
+                        "use --restore-to @TRANSPORT to name the cycle")
     flags = sorted(s for a in p._actions for s in a.option_strings
                    if s.startswith("--") and s != "--help")
     p.epilog = ("flags: " + " ".join(flags)
@@ -107,8 +135,39 @@ def build_parser() -> argparse.ArgumentParser:
     return p
 
 
+def resolve_restore_flags(args):
+    """Collapse the flag surface into (launch transport, restore specs):
+    the ONE place the deprecated spellings (--transport-a/--transport-b/
+    --flip-transport) are translated into --transport/--restore-to, with
+    a notice on stderr.  Each spec is a `(n, transport)` pair from
+    `repro.parse_restore_spec`, None meaning "unchanged"."""
+    notes = []
+    transport = args.transport
+    if args.transport_a:
+        notes.append("--transport-a is deprecated; use --transport")
+        transport = transport or args.transport_a
+    transport = transport or "inproc"
+    specs = [parse_restore_spec(s) for s in (args.restore_to or [])]
+    if args.transport_b:
+        notes.append("--transport-b is deprecated; use "
+                     "--restore-to @TRANSPORT")
+        specs.append((None, args.transport_b))
+    if args.flip_transport:
+        notes.append("--flip-transport is deprecated; use "
+                     "--restore-to @TRANSPORT to name the restart cycle")
+        if not any(t for _, t in specs):
+            specs.append((None, "inproc"))
+    for note in notes:
+        print(f"DEPRECATED: {note}", file=sys.stderr)
+    if not specs:
+        specs = [(None, None)]   # same size, same transport
+    return transport, specs
+
+
 def parse_args(argv=None):
     args = build_parser().parse_args(argv)
+    if args.elastic:
+        args.chaos = True
     if args.ranks is None:
         if args.chaos:
             args.ranks = int(os.environ.get("MANA_DEMO_RANKS",
@@ -124,7 +183,8 @@ def payload(src, seq):
 
 
 # ---------------------------------------------------------------------------
-# phase A: run under transport A, checkpoint mid-traffic, write the image
+# phase A: run under the launch transport, checkpoint mid-traffic, write
+# the image
 # ---------------------------------------------------------------------------
 
 def make_phase_a(n):
@@ -208,37 +268,54 @@ def phase_a(n, transport, image_path, async_ckpt=False):
 
 
 # ---------------------------------------------------------------------------
-# phase B: bootstrap a fresh world over transport B from the image alone
+# phase B: bootstrap a fresh world from the image alone — any transport,
+# any world size, all through repro.restore_world
 # ---------------------------------------------------------------------------
 
-def make_phase_b(n, snaps, from_transport, to_transport):
+def make_phase_b(rw, from_transport, to_transport):
+    identity = rw.plan.is_identity
+
     def work(ctx):
-        a, r, ep = ctx.agent, ctx.rank, ctx.ep
+        a, r, ep, n = ctx.agent, ctx.rank, ctx.ep, ctx.n
         prev = (r - 1) % n
-        blob = snaps[r]["agent"]
-        assert blob["transport"] == from_transport, blob["transport"]
-        # §III-C restore: rebind the virtual comm table onto THIS
-        # world's endpoint (the new network), re-register gids, restore
-        # collective counts, re-append drained messages for replay.
-        restore_agent_from_blob(ctx, blob)
-        # App-held comm HANDLES come from the image (vids are stable
-        # across restore); membership can't distinguish identically-
-        # membered comms, e.g. a row as wide as the world.
-        a.world_comm = snaps[r]["world_comm"]
-        a.row = snaps[r]["row"]
-        # 1) replay the backlog out of the drain buffer: sequence
-        #    numbers must continue exactly at the cut (closure check:
-        #    predecessor's sends minus our receives at ITS cut step)
-        backlog = len(ep.drain_buffer)
-        expected = (snaps[prev]["step"] + 1) - snaps[r]["recvd"]
-        assert backlog == expected, (r, backlog, expected)
-        seq = snaps[r]["recvd"]
-        for _ in range(backlog):
-            m = a.recv(prev, timeout=120)
-            assert m.payload == payload(prev, seq), (r, seq)
-            seq += 1
+        # §III-C restore through the ONE entrypoint: rebind the (plan-
+        # remapped) virtual comm table onto THIS world's endpoint,
+        # re-register gids, restore collective counts, re-append drained
+        # messages for replay.
+        owned = rw.bind(ctx)
+        if identity:
+            st = owned[r]
+            assert st["agent"]["transport"] == from_transport
+            # App-held comm HANDLES come from the image (vids are stable
+            # across restore); membership can't distinguish identically-
+            # membered comms, e.g. a row as wide as the world.
+            a.world_comm = st["world_comm"]
+            a.row = st["row"]
+            # replay the backlog out of the drain buffer: sequence
+            # numbers must continue exactly at the cut (closure check:
+            # predecessor's sends minus our receives at ITS cut step)
+            backlog = len(ep.drain_buffer)
+            expected = (rw.state(prev)["step"] + 1) - st["recvd"]
+            assert backlog == expected, (r, backlog, expected)
+            seq = st["recvd"]
+            for _ in range(backlog):
+                m = a.recv(prev, timeout=120)
+                assert m.payload == payload(prev, seq), (r, seq)
+                seq += 1
+        else:
+            # ELASTIC restore: the old ring's sequence numbers are
+            # meaningless under the new numbering — replay exactly the
+            # remapped in-flight backlog the bind re-appended, then
+            # rebuild the topology comms for the NEW world (the plan's
+            # docstring: rows/rings are app topology, the app re-derives
+            # them; the world comm was remapped in place)
+            for src, _dst, tag, _ in rw.drains_for(r):
+                a.recv(src, tag=tag, timeout=120)
+            row_w = row_width(n)
+            base = (r // row_w) * row_w
+            a.row = a.create_comm(range(base, base + row_w))
         assert len(ep.drain_buffer) == 0
-        # 2) fresh epoch on a new tag, with a second checkpoint
+        # fresh epoch on a new tag, with a second checkpoint
         recvd = 0
         step = 0
         for step in range(STEPS_B):
@@ -267,27 +344,31 @@ def make_phase_b(n, snaps, from_transport, to_transport):
     return work
 
 
-def phase_b(n, transport, image_path, async_ckpt=False):
+def phase_b(n_to, transport, image_path, async_ckpt=False):
     with open(image_path) as f:
         image = json.load(f)
-    assert image["n_ranks"] == n
-    snaps = {int(r): s for r, s in image["ranks"].items()}
+    n_from = image["n_ranks"]
+    rw = restore_world(image,
+                       RestorePlan.between(n_from, n_to, transport))
+    rw.states()   # decode once, launcher-side (socket children fork)
     print(f">>> B: restoring image written under {image['transport']!r} "
-          f"onto a fresh {transport!r} world")
-    res = run_world(transport, n,
-                    make_phase_b(n, snaps, image["transport"], transport),
+          f"at {n_from} ranks onto a fresh {transport!r} world of {n_to}")
+    res = run_world(transport, n_to,
+                    make_phase_b(rw, image["transport"], transport),
                     unblock_window=0.5, timeout=300, async_ckpt=async_ckpt)
-    assert len(res.results) == n and res.coord_stats["checkpoints"] == 1
-    # §III-B closure in the RESTORED world: every ring pair's byte
-    # counters balance once the traffic of phase B is fully consumed
-    # (checked from the per-rank counter vectors each rank shipped back
-    # — the launcher holds no endpoint in a multi-process world)
-    for r in range(n):
-        for s in ((r - 1) % n, (r + 1) % n):
-            assert (res.results[r]["recvd"][s]
-                    == res.results[s]["sent"][r]), (r, s)
-    print(f">>> B: world restored over {transport!r} committed a second "
-          f"checkpoint; coordinator stats: {res.coord_stats}")
+    assert len(res.results) == n_to and res.coord_stats["checkpoints"] == 1
+    if rw.plan.is_identity:
+        # §III-B closure in the RESTORED world: every ring pair's byte
+        # counters balance once the traffic of phase B is fully consumed
+        # (checked from the per-rank counter vectors each rank shipped
+        # back — the launcher holds no endpoint in a multi-process world)
+        for r in range(n_to):
+            for s in ((r - 1) % n_to, (r + 1) % n_to):
+                assert (res.results[r]["recvd"][s]
+                        == res.results[s]["sent"][r]), (r, s)
+    print(f">>> B: world restored over {transport!r} at {n_to} ranks "
+          f"committed a second checkpoint; coordinator stats: "
+          f"{res.coord_stats}")
 
 
 # ---------------------------------------------------------------------------
@@ -317,18 +398,19 @@ def make_chaos_worker(n, image, target, ckpt_every, async_ckpt=False,
     receive asserts the ring sequence continues exactly where the cut
     happened."""
     row_w = row_width(n)
-    snaps = None if image is None else image["ranks"]
+    rw = None if image is None else restore_world(image)
+    if rw is not None:
+        rw.states()   # decode once before the fork
 
     def work(ctx):
         a, r = ctx.agent, ctx.rank
         prev = (r - 1) % n
-        if snaps is None:
+        if rw is None:
             start = recvd = 0
             base = (r // row_w) * row_w
             a.row = a.create_comm(range(base, base + row_w))
         else:
-            blob = snap_state(snaps[str(r)])
-            restore_agent_from_blob(ctx, blob["agent"])
+            blob = rw.bind(ctx)[r]
             a.world_comm = blob["world_comm"]
             a.row = blob["row"]
             start, recvd = blob["step"] + 1, blob["recvd"]
@@ -414,11 +496,10 @@ def chaos_schedule(seed, n, kills, target):
     return plans
 
 
-def chaos_main(args):
+def chaos_main(args, transport, specs):
     n, seed, kills = args.ranks, args.seed, args.kills
     target, every = CHAOS_STEPS, CHAOS_CKPT_EVERY
-    transports = ([args.transport_a, args.transport_b]
-                  if args.flip_transport else args.transport_a)
+    transports = [transport] + [t for _, t in specs if t]
     schedule = chaos_schedule(seed, n, kills, target)
     resume_steps = []   # min resume step per attempt (0 = cold start)
 
@@ -471,21 +552,195 @@ def chaos_main(args):
     print(f"PASS ({time.perf_counter() - t0:.1f}s)")
 
 
+# ---------------------------------------------------------------------------
+# --elastic: the autoscaling chaos scenario — shrink to the survivors,
+# grow back when capacity returns, bit-identical logical state throughout
+# ---------------------------------------------------------------------------
+
+def make_elastic_worker(G, rw, shards, start, target, ckpt_every,
+                        async_ckpt=False,
+                        compress_level=DEFAULT_COMPRESS_LEVEL):
+    """One incarnation of the ELASTIC chaos job.  The logical state is a
+    global float64 vector x = arange(G) + step (logical axis "batch",
+    sharded across whatever world size this attempt got) plus a
+    replicated step counter; per step the job runs a lagged ring p2p
+    (messages ALWAYS in flight at a cut), one world allreduce (count
+    equalization pins every rank to the same step at a committed cut —
+    what makes an elastic resume point well-defined), then x += 1.
+    On restore each rank asserts its resharded slice is BIT-IDENTICAL
+    to the logical arange — across shrink, grow, and both transports."""
+
+    def work(ctx):
+        a, r, n = ctx.agent, ctx.rank, ctx.n
+        prev = (r - 1) % n
+        if rw is None:
+            x = np.array_split(np.arange(G, dtype=np.float64), n)[r].copy()
+            rep = np.zeros((), np.float64)
+        else:
+            rw.bind(ctx)   # remapped comms/counts/drains (cold: seeded)
+            x = shards[r]["x"].copy()
+            rep = shards[r]["rep"].copy().reshape(())
+            # the tentpole promise, checked where it matters: the
+            # reshard is exact, not approximate
+            want = np.array_split(
+                np.arange(G, dtype=np.float64) + start, n)[r]
+            assert np.array_equal(x, want), (r, n, start)
+            assert float(rep) == float(start), (r, rep, start)
+            # replay the remapped in-flight backlog; old-world sequence
+            # numbers are meaningless under the new numbering, so just
+            # consume — at a committed cut this completes every message
+            # <= the cut step, and fresh traffic restarts at `start`
+            # uniformly across ALL pairs (old and new alike)
+            for src, _dst, tag, _ in rw.drains_for(r):
+                a.recv(src, tag=tag, timeout=120)
+        assert len(ctx.ep.drain_buffer) == 0
+        recvd = start
+        step = start
+
+        def snapshot():
+            epoch = a.ckpt_epoch
+            codec = SnapshotCodec(compress_level=compress_level)
+            arrays = {"x": x.copy(), "rep": rep.copy()}
+            extra = {"step": step, "recvd": recvd,
+                     "logical": {"x": ["batch"], "rep": []},
+                     "agent": a.serialize()}
+            if async_ckpt:
+                return lambda: codec.encode(epoch, arrays, extra=extra)
+            ctx.coord.ship_snapshot(epoch,
+                                    codec.encode(epoch, arrays, extra=extra))
+
+        for step in range(start, target):
+            if r == 0 and step and (step % ckpt_every == 0
+                                    or step == start + 1):
+                ctx.coord.request_checkpoint()
+            a.send((r + 1) % n, payload(r, step), tag=0)
+            while recvd <= step - LAG:
+                m = a.recv(prev, timeout=120)
+                assert m.payload == payload(prev, recvd), (r, recvd)
+                recvd += 1
+            a.allreduce(a.world_comm, 1.0, lambda p, q: p + q)
+            x += 1.0
+            rep += 1.0
+            pending = a._ckpt_pending()
+            if ctx.faults is not None:
+                ctx.faults.on_step(r, step, ckpt_pending=pending)
+            if pending:
+                a.safe_point(snapshot)
+        a.barrier_op(a.world_comm)
+        while a._ckpt_pending():
+            if ctx.faults is not None:
+                ctx.faults.on_step(r, step, ckpt_pending=True)
+            a.safe_point(snapshot)
+            time.sleep(0.002)
+        while recvd < target:  # pipeline tail
+            m = a.recv(prev, timeout=120)
+            assert m.payload == payload(prev, recvd), (r, recvd)
+            recvd += 1
+        return {"start": start, "x": x.tolist(), "rep": float(rep)}
+
+    return work
+
+
+def elastic_main(args, transport, specs):
+    n0, seed, kills = args.ranks, args.seed, args.kills
+    n1 = n0 - kills
+    assert n1 >= 1, f"--kills {kills} leaves no survivors of {n0}"
+    target, every = CHAOS_STEPS, CHAOS_CKPT_EVERY
+    G = 2 * n0
+    transports = [transport] + [t for _, t in specs if t]
+    # the seeded schedule: attempt 0 at n0 loses `kills` ranks at once
+    # (strictly after the first cadence commit), attempt 1 runs at the
+    # surviving n1 and loses one more, attempt 2 grows back to n0 when
+    # capacity "returns" and finishes the horizon fault-free
+    rng = random.Random((seed, "elastic"))
+    step0 = every + 2
+    plan0 = FaultPlan(seed)
+    victims0 = sorted(rng.sample(range(n0), kills))
+    for v in victims0:
+        plan0.kill(v, at_step=step0)
+    plan1 = FaultPlan(seed)
+    victim1 = rng.randrange(n1)
+    plan1.kill(victim1, at_step=min(step0 + every, target - 2))
+    schedule = {0: plan0, 1: plan1}
+    capacities = {0: n0, 1: n1, 2: n0}
+
+    sizes, origins, resume_steps = [], [], []
+
+    def fn_factory(attempt, image):
+        if image is None:
+            rw, shards, resume = None, None, 0
+        else:
+            rw = restore_world(image)
+            steps = {st["step"] for st in rw.states().values()}
+            # counts-equalized commit => ONE global step at the cut
+            assert len(steps) == 1, steps
+            resume = steps.pop() + 1
+            shards = rw.reshard()   # launcher-side; forked children share
+        sizes.append(None if rw is None else rw.plan.n_to)
+        origins.append(None if image is None else int(image["n_ranks"]))
+        resume_steps.append(resume)
+        print(f">>> elastic attempt {attempt}: "
+              f"{'cold start' if rw is None else f'{rw.plan.n_from} -> {rw.plan.n_to} ranks'}"
+              f", resume step {resume}")
+        return make_elastic_worker(G, rw, shards, resume, target, every,
+                                   async_ckpt=args.async_ckpt,
+                                   compress_level=args.compress_level)
+
+    t0 = time.perf_counter()
+    print(f"=== ELASTIC chaos: {n0} ranks, kill {kills} -> resume at "
+          f"{n1} -> grow back to {n0}; seed {seed}, transport(s) "
+          f"{transports} ===")
+    sup = run_world_supervised(
+        transports, n0, fn_factory, max_restarts=4, elastic=True,
+        faults_for_attempt=lambda a: schedule.get(a),
+        capacity_for_attempt=lambda a, rf: capacities.get(a),
+        unblock_window=0.5, timeout=300, log_dir=args.log_dir,
+        async_ckpt=args.async_ckpt)
+
+    assert sup.final_n == n0 and len(sup.result.results) == n0
+    assert [f["n"] for f in sup.failures] == [n0, n1], sup.failures
+    assert sizes[1] == n1 and sizes[2] == n0, sizes
+    # the grow-back attempt restored a COMMITTED image of the shrunken
+    # world — progress made at n1 survived the growth
+    assert origins[2] == n1, origins
+    assert resume_steps[2] >= resume_steps[1] > 0, resume_steps
+    # bit-identical logical state on the surviving work: the final
+    # shards concatenate to exactly arange(G) + target, every rank's
+    # replicated counter agrees, and the ring sequence closed
+    full = np.concatenate([np.asarray(sup.result.results[r]["x"])
+                           for r in range(n0)])
+    assert np.array_equal(full,
+                          np.arange(G, dtype=np.float64) + target)
+    assert all(v["rep"] == float(target)
+               for v in sup.result.results.values())
+    recoveries = [round(f["recovery_s"], 3) for f in sup.failures
+                  if f.get("recovery_s") is not None]
+    print(f">>> elastic: {n0} -> {n1} -> {n0} ranks in {sup.attempts} "
+          f"attempts; resume steps {resume_steps}; recovery latencies "
+          f"{recoveries}s; final state bit-identical to the logical "
+          f"arange + {target}")
+    print(f"PASS ({time.perf_counter() - t0:.1f}s)")
+
+
 def main():
     args = parse_args()
+    transport, specs = resolve_restore_flags(args)
     if args.chaos:
         try:
-            chaos_main(args)
+            if args.elastic:
+                elastic_main(args, transport, specs)
+            else:
+                chaos_main(args, transport, specs)
         except BaseException:
             if args.log_dir:
                 os.makedirs(args.log_dir, exist_ok=True)
                 repro = (f"python examples/multirank_simulation.py "
                          f"--chaos --ranks {args.ranks} "
                          f"--seed {args.seed} --kills {args.kills} "
-                         f"--transport-a {args.transport_a} "
-                         f"--transport-b {args.transport_b}"
-                         + (" --flip-transport" if args.flip_transport
-                            else "")
+                         f"--transport {transport}"
+                         + "".join(f" --restore-to {n or ''}@{t}"
+                                   for n, t in specs if t)
+                         + (" --elastic" if args.elastic else "")
                          + (" --quick" if args.quick else ""))
                 with open(os.path.join(args.log_dir,
                                        "failing_seed.txt"), "w") as f:
@@ -496,12 +751,15 @@ def main():
     image_path = args.image or os.path.join(
         tempfile.mkdtemp(prefix="mana_image_"), "ckpt_image.json")
     t0 = time.perf_counter()
+    restores = [(spec_n or n, spec_t or transport)
+                for spec_n, spec_t in specs]
     print(f"=== {n}-rank checkpoint -> drain -> restore round trip "
           f"(rows of {row_width(n)}, tree collectives, "
-          f"{args.transport_a} -> {args.transport_b}, "
+          f"{transport} -> {', '.join(f'{rn}@{rt}' for rn, rt in restores)}, "
           f"{'async' if args.async_ckpt else 'sync'} checkpoints) ===")
-    phase_a(n, args.transport_a, image_path, args.async_ckpt)
-    phase_b(n, args.transport_b, image_path, args.async_ckpt)
+    phase_a(n, transport, image_path, args.async_ckpt)
+    for n_to, t_to in restores:
+        phase_b(n_to, t_to, image_path, args.async_ckpt)
     print(f"PASS ({time.perf_counter() - t0:.1f}s)")
 
 

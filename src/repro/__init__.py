@@ -7,4 +7,17 @@ files under src/ derives the canonical module name (repro.core.codec,
 not core.codec) only when every ancestor has an __init__.py — without
 it, doctest runs import DUPLICATE module objects whose exception types
 fail isinstance checks against the normally-imported ones.
+
+Public restore surface (ISSUE 6): `repro.restore_world(image, plan)` is
+THE way to restore a committed image — same world, different world size
+(elastic), or different transport — with `RestorePlan` describing the
+old-rank -> new-rank remapping and `WorldMismatchError` the typed
+failure for a mis-sized restore.  Everything here is importable from a
+jax-free process (socket rank children fork per restart attempt).
 """
+from repro.core.codec import WorldMismatchError
+from repro.core.restore import (RestorePlan, RestoredWorld,
+                                parse_restore_spec, restore_world)
+
+__all__ = ["RestorePlan", "RestoredWorld", "WorldMismatchError",
+           "parse_restore_spec", "restore_world"]

@@ -56,7 +56,7 @@ from repro.comm.transport.base import TAG_RESULT, Endpoint, TransportClosed
 from repro.comm.transport.faults import FaultPlan, RankKilled
 from repro.comm.transport.inproc import InprocTransport
 from repro.comm.transport.tcp import FabricSwitch, SocketTransport
-from repro.core.codec import image_from_bytes, image_to_bytes
+from repro.core.codec import image_to_bytes
 from repro.core.control import (CoordinatorClient, CoordinatorServer,
                                 RankFailure, make_control_plane)
 
@@ -110,31 +110,25 @@ def _make_agent(rank: int, ep: Endpoint, coord, n: int, mode: str,
 
 
 def restore_agent_from_blob(ctx: "WorldContext", agent_blob: Dict) -> None:
-    """Rebind a serialized `RankAgent` blob (the "agent" entry of a
-    checkpoint-image rank snapshot) onto THIS world's endpoint: the
-    virtual comm table is restored and re-registered with the
-    coordinator, collective counts resume, and drained messages are
-    re-appended for replay — the §III-C restore ritual, shared by every
-    restart path (chaos supervisor, benchmarks, tests, examples).
+    """DEPRECATED shim over `repro.restore_world` (ISSUE 6).
 
+    The §III-C restore ritual now lives behind the one public
+    entrypoint — build a plan-resolved world and `bind` it instead:
+
+        repro.restore_world(image).bind(ctx)
+
+    This shim performs the same-world (identity-plan) rebind of one
+    serialized `RankAgent` blob for callers that predate `RestorePlan`.
     App-held comm HANDLES (world/row vids) are application upper-half
-    state and are NOT reassigned here: vids are stable across restore,
-    and membership alone cannot distinguish identically-membered comms
-    (a row as wide as the world IS the world) — reassign them from your
-    own image fields, or scan `ctx.agent.comms.active()`.
+    state and are NOT reassigned here — reassign them from your own
+    image fields, or scan `ctx.agent.comms.active()`.
     """
-    from repro.comm.transport.base import Message
-    from repro.core.virtual import VirtualCommTable, comm_gid
-    a, ep = ctx.agent, ctx.ep
-    a.comms = VirtualCommTable.restore(agent_blob["comms"],
-                                       real_factory=lambda ranks: ep)
-    for ranks in a.comms.active().values():
-        ctx.coord.register_comm(comm_gid(tuple(ranks)), tuple(ranks))
-    a.coll_counts.update({int(g): c
-                          for g, c in agent_blob["coll_counts"].items()})
-    for src, dst, tag, hexpayload in agent_blob["drain_buffer"]:
-        ep.drain_buffer.append(
-            Message(src, dst, tag, bytes.fromhex(hexpayload)))
+    from repro.core.restore import _bind_agent_blob, deprecated_once
+    deprecated_once(
+        "restore_agent_from_blob",
+        "harness.restore_agent_from_blob is deprecated; use "
+        "repro.restore_world(image).bind(ctx) instead")
+    _bind_agent_blob(ctx, agent_blob)
 
 
 def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
@@ -385,6 +379,7 @@ class SupervisedRun:
     failures: List[Dict]            # one record per failed attempt
     final_transport: str
     image: Optional[Dict]           # image the final attempt started from
+    final_n: int = 0                # world size of the successful attempt
 
 
 def run_world_supervised(
@@ -394,18 +389,32 @@ def run_world_supervised(
         faults_for_attempt: Optional[Callable[[int], Optional[FaultPlan]]] = None,
         image: Optional[Dict] = None,
         log_dir: Optional[str] = None,
+        elastic: bool = False,
+        capacity_for_attempt: Optional[Callable[[int, Optional[RankFailure]],
+                                                Optional[int]]] = None,
         **run_kw) -> SupervisedRun:
     """Supervise a world through rank failures.
 
     `fn_factory(attempt, image)` builds the per-rank function for one
     attempt; `image` is None on a cold start, else the last COMMITTED
     checkpoint image (`{"epoch", "n_ranks", "ranks": {str(rank): blob}}`)
-    — forced through the transport-free binary image container
-    (`repro.core.codec.image_to_bytes` round trip: binary snapshot
-    blobs are inert bytes, dict blobs must be JSON-safe, so a blob
-    that smuggled live transport state would fail loudly), and
-    restarting on a DIFFERENT backend (pass a sequence of transport
-    names to cycle through) is correct by construction.
+    — normalized through `repro.restore_world` (the transport-free
+    binary image container round trip: binary snapshot blobs are inert
+    bytes, dict blobs must be JSON-safe, so a blob that smuggled live
+    transport state would fail loudly), so restarting on a DIFFERENT
+    backend (pass a sequence of transport names to cycle through) is
+    correct by construction.
+
+    ELASTIC mode (`elastic=True`, ISSUE 6): the supervisor relaunches
+    at whatever capacity is available instead of insisting on `n` —
+    after a failure the next attempt runs at `n - len(failed ranks)`
+    (kill 3 of 64 -> resume at 61), and `capacity_for_attempt(attempt,
+    last_failure)` can override per attempt (return the original `n` to
+    grow back once capacity returns; None keeps the computed size).
+    Whenever the attempt's world size differs from the image's, the
+    image gets a `RestorePlan` attached ("remap" header field) so the
+    ranks' `repro.restore_world(image).bind(ctx)` reshards and remaps
+    automatically.
 
     On `RankFailure`: record it (to `log_dir` if given), adopt the
     failure's committed image if it carries one, and relaunch.  Raises
@@ -415,9 +424,11 @@ def run_world_supervised(
 
     >>> sup = run_world_supervised(
     ...     "inproc", 2, lambda attempt, image: (lambda ctx: ctx.rank))
-    >>> (sup.attempts, sup.failures, sup.result.results)
-    (1, [], {0: 0, 1: 1})
+    >>> (sup.attempts, sup.failures, sup.result.results, sup.final_n)
+    (1, [], {0: 0, 1: 1}, 2)
     """
+    from repro.core.restore import RestorePlan, restore_world
+
     names = [transports] if isinstance(transports, str) else list(transports)
     failures: List[Dict] = []
     if log_dir:
@@ -435,27 +446,45 @@ def run_world_supervised(
             user_on_running(server)
 
     last_failure: Optional[RankFailure] = None
+    n_attempt = n
     for attempt in range(max_restarts + 1):
         transport = names[attempt % len(names)]
+        if capacity_for_attempt is not None:
+            cap = capacity_for_attempt(attempt, last_failure)
+            if cap is not None:
+                n_attempt = max(1, int(cap))
         faults = faults_for_attempt(attempt) if faults_for_attempt else None
+        if image is not None and (
+                image.get("n_ranks") != n_attempt
+                or (image.get("remap") or {}).get("n_to",
+                                                  n_attempt) != n_attempt):
+            # elastic relaunch: record the plan INTO the image so every
+            # restore path downstream (fn closures, log_dir replays)
+            # sees the same remapping; also overwrites a stale remap
+            # left by a previous attempt at a different size
+            image = RestorePlan.for_image(image, n_attempt,
+                                          transport).attach(image)
         fn = fn_factory(attempt, image)
         try:
-            res = run_world(transport, n, fn, faults=faults,
+            res = run_world(transport, n_attempt, fn, faults=faults,
                             on_running=on_running, **run_kw)
             return SupervisedRun(res, attempt + 1, failures, transport,
-                                 image)
+                                 image, final_n=n_attempt)
         except RankFailure as rf:
             last_failure = rf
             prev_detect[0] = rf.detected_at
             record = {"attempt": attempt, "transport": transport,
-                      "failed_ranks": rf.ranks,
+                      "n": n_attempt, "failed_ranks": rf.ranks,
                       "image_epoch": None if rf.committed_image is None
                       else rf.committed_image["epoch"]}
             if rf.committed_image is not None:
-                # transport-free by construction: binary image
-                # container round trip (see the docstring)
-                image = image_from_bytes(image_to_bytes(
-                    rf.committed_image))
+                # normalize through the one public restore entrypoint
+                # (container round trip; see the docstring)
+                image = restore_world(rf.committed_image).image
+            if elastic:
+                # relaunch with the survivors; capacity_for_attempt may
+                # still grow the next attempt back
+                n_attempt = max(1, n_attempt - len(rf.ranks))
             failures.append(record)
             if log_dir:
                 with open(os.path.join(log_dir,

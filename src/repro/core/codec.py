@@ -103,6 +103,15 @@ class DeltaChainError(CheckpointError):
     whose chain exceeds the configured bound."""
 
 
+class WorldMismatchError(ImageError):
+    """A committed image's world size disagrees with the world it is
+    being restored into (and no reshard-capable `RestorePlan` bridges
+    them).  Raised by `repro.restore_world` / `RestorePlan.for_image`
+    at plan time, by `RestoredWorld.bind` against the live world, and
+    by the coordinator's HELLO-time validation (the "hello" control
+    op) — never a silent shard misassignment."""
+
+
 # ---------------------------------------------------------------------------
 # chain management policy
 # ---------------------------------------------------------------------------
@@ -886,6 +895,28 @@ def migrate_image(image: Dict) -> Dict:
 # inert bytes.
 _IMG_MAGIC = b"MIMG"
 IMG_FORMAT = 1
+
+# The normative field registry of the committed-image container header.
+# docs/PROTOCOL.md renders this table and `docs/check_docs_drift.py`
+# diffs the doc against THIS dict, so adding an image field without
+# documenting it fails CI.  `image_to_bytes` passes every non-blob key
+# through the header verbatim, which is how `remap` (attached by an
+# elastic supervisor via `RestorePlan.attach`) survives the round trip.
+IMAGE_FIELDS: Dict[str, str] = {
+    "epoch": "checkpoint epoch the image committed at",
+    "n_ranks": "world size the snapshots were taken at; validated at "
+               "restore time (a mismatched world without a RestorePlan "
+               "raises WorldMismatchError)",
+    "ranks": "per-rank snapshot blobs keyed by source rank (binary "
+             "containers referenced from the blob section, JSON-safe "
+             "app dicts inline)",
+    "chains": "per-rank delta base-chain blobs for incremental images "
+              "({rank: {base_epoch: blob}})",
+    "remap": "elastic restore spec recorded by RestorePlan.attach "
+             "({n_from, n_to, transport, rank_map}); consumed by "
+             "repro.restore_world to rebuild the plan after a relaunch "
+             "at a different capacity",
+}
 
 
 def image_to_bytes(image: Dict) -> bytes:

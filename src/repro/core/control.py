@@ -61,7 +61,7 @@ import traceback
 from typing import Dict, Optional, Sequence, Tuple
 
 from repro.comm.transport.base import TAG_CTRL, TAG_INTENT, Endpoint
-from repro.core.codec import blob_base_epoch
+from repro.core.codec import WorldMismatchError, blob_base_epoch
 from repro.core.coordinator import CheckpointAborted, Coordinator
 
 # ---------------------------------------------------------------------------
@@ -127,6 +127,13 @@ CTRL_OPS: Dict[str, Dict[str, object]] = {
         dir="rank->coord", blocking=False,
         doc="checkpoint snapshot blob for the launcher-side image "
             "collector (delta blobs carry ckpt_base_epoch for chain GC)"),
+    "hello": dict(
+        dir="rank->coord", blocking=True,
+        doc="restore-time world validation: the rank announces the "
+            "image's origin world (n_from) and the world it believes it "
+            "is joining (n_to); a reply of world_mismatch raises a "
+            "typed WorldMismatchError instead of silently misassigning "
+            "shards"),
     "eof": dict(
         dir="transport->coord", blocking=False,
         doc="synthesized when a rank's connection closes; goodbye-less "
@@ -444,6 +451,24 @@ class CoordinatorServer:
             elif op == "straggler_report":
                 self._reply(src, {"report": c.straggler_report(
                     req["threshold"])})
+            elif op == "hello":
+                # elastic-restore handshake (ISSUE 6): the coordinator
+                # is the one component that knows the LIVE world size,
+                # so it is where an image restored into the wrong world
+                # gets rejected.  n_from != n_to is fine — that is what
+                # a RestorePlan is for — but the rank's believed n_to
+                # must match this world or its shard assignment is
+                # garbage.
+                if req["n_to"] != self.n_ranks:
+                    self._reply(src, {
+                        "error": "world_mismatch",
+                        "msg": (f"rank {src} restoring an image planned "
+                                f"for n_to={req['n_to']} into a world of "
+                                f"n_ranks={self.n_ranks} "
+                                f"(image origin n_from={req['n_from']})"),
+                    })
+                else:
+                    self._reply(src, {"ok": True, "n_ranks": self.n_ranks})
             else:
                 raise ValueError(f"unknown control op {op!r}")
         except CheckpointAborted as e:
@@ -501,9 +526,22 @@ class CoordinatorClient:
         rep = pickle.loads(msg.payload)
         if rep.get("error") == "aborted":
             raise CheckpointAborted(rep["msg"])
+        if rep.get("error") == "world_mismatch":
+            raise WorldMismatchError(rep["msg"])
         if rep.get("error"):
             raise RuntimeError(f"coordinator server error:\n{rep['msg']}")
         return rep
+
+    # ---- elastic-restore handshake (ISSUE 6) -------------------------------
+    def hello(self, n_from: int, n_to: int, timeout: float = 60.0) -> int:
+        """Validate this rank's restore plan against the live world.
+
+        Raises `WorldMismatchError` if the plan's target world (n_to)
+        is not the world the coordinator is actually running; returns
+        the coordinator's n_ranks on success."""
+        rep = self._call({"op": "hello", "n_from": int(n_from),
+                          "n_to": int(n_to)}, timeout)
+        return rep["n_ranks"]
 
     # ---- the Coordinator surface RankAgent consumes ------------------------
     def request_checkpoint(self, timeout: float = 60.0) -> int:

@@ -8,10 +8,16 @@ a different mesh shape (elastic restart).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Optional, Sequence, Tuple
 
-import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+if TYPE_CHECKING:  # annotations only — jax itself is imported lazily
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# jax is imported INSIDE the functions that build physical shardings:
+# the elastic transport-era restore path (`repro.core.restore` /
+# `repro.core.split_state.reshard_state`) shares this module's logical
+# vocabulary from jax-free processes (socket rank children fork per
+# restart attempt; a jax-sized address space would dominate the fork).
 
 # Logical axis vocabulary --------------------------------------------------
 # "batch"   -> data-parallel axes (pod, data)
@@ -24,6 +30,26 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # "layers"  -> unsharded for params; ZeRO-1 shards it for optimizer state
 # "seq"     -> sequence-parallel (model) when SP is enabled; else unsharded
 # None      -> replicated
+
+# logical names sharded across the DATA-parallel direction.  In the
+# transport era the rank world IS the (1-D) data axis, so these are the
+# names the elastic reshard (`split_state.reshard_state`) splits/merges
+# across world sizes; everything else is replicated unless claimed by
+# the ZeRO-1 rule below.
+WORLD_LOGICAL_AXES: Tuple[str, ...] = ("batch",)
+
+
+def zero1_pick_dim(entries: Sequence, shape: Sequence[int], dsize: int,
+                   *, allow_uneven: bool = False) -> Optional[int]:
+    """The ZeRO-1 dim choice, factored out so `zero1_shard` (mesh
+    shardings; even tiling required by jit) and the transport-era
+    elastic reshard (numpy `array_split`; uneven allowed) cannot
+    disagree: the first currently-unsharded dim eligible for the data
+    shard, or None to fall back to replication/param spec."""
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and (allow_uneven or dim % dsize == 0):
+            return i
+    return None
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -71,6 +97,7 @@ class ShardingRules:
         only ever applied via with_sharding_constraint on intermediates,
         where GSPMD may pad.
         """
+        from jax.sharding import PartitionSpec as P
         allow_uneven = {"seq"}
         out = []
         used: set = set()
@@ -100,6 +127,7 @@ class ShardingRules:
 
     def named(self, logical: Sequence[Optional[str]],
               shape: Optional[Sequence[int]] = None) -> NamedSharding:
+        from jax.sharding import NamedSharding
         return NamedSharding(self.mesh, self.spec(logical, shape))
 
 
@@ -109,6 +137,7 @@ def make_rules(mesh: Mesh, **kw) -> ShardingRules:
 
 def logical_to_physical(rules: ShardingRules, logical_tree, shape_tree=None):
     """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    import jax
     if shape_tree is None:
         return jax.tree.map(
             lambda lg: rules.spec(lg), logical_tree,
@@ -127,6 +156,7 @@ def zero1_shard(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
     the data-axis size and assigns it to 'data' (and 'pod' if present and
     still divisible).  Falls back to the param spec when nothing divides.
     """
+    from jax.sharding import PartitionSpec as P
     if "data" not in mesh.axis_names:
         return spec
     entries = list(spec) + [None] * (len(shape) - len(spec))
@@ -135,11 +165,12 @@ def zero1_shard(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
     if "data" in used:
         return spec  # already data-sharded (e.g. FSDP params)
     dsize = mesh.shape["data"]
-    for i, (e, dim) in enumerate(zip(entries, shape)):
-        if e is None and dim % dsize == 0:
-            if "pod" in mesh.axis_names and dim % (dsize * mesh.shape["pod"]) == 0:
-                entries[i] = ("pod", "data")
-            else:
-                entries[i] = "data"
-            return P(*entries)
+    i = zero1_pick_dim(entries, shape, dsize)
+    if i is not None:
+        dim = shape[i]
+        if "pod" in mesh.axis_names and dim % (dsize * mesh.shape["pod"]) == 0:
+            entries[i] = ("pod", "data")
+        else:
+            entries[i] = "data"
+        return P(*entries)
     return spec

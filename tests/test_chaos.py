@@ -343,12 +343,13 @@ def test_supervised_restart_from_committed_image(transport):
         if image is None:
             return _recovery_job
 
+        from repro import restore_world
+        rw = restore_world(image)
         snaps = image["ranks"]
 
         def resumed(ctx):
-            from repro.comm.transport.harness import restore_agent_from_blob
             blob = snaps[str(ctx.rank)]
-            restore_agent_from_blob(ctx, blob["agent"])
+            rw.bind(ctx, agent_blob=blob["agent"])
             for vid, ranks in ctx.agent.comms.active().items():
                 if tuple(ranks) == tuple(range(n)):
                     ctx.agent.world_comm = vid

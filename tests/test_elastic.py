@@ -1,13 +1,492 @@
-"""Elastic restart (split-process payoff): checkpoint written under one
-mesh topology restores onto a DIFFERENT topology with identical training
-behaviour.  Runs in a subprocess so the fake-device XLA flag never leaks
-into other tests."""
+"""Elastic restore (ISSUE 6 + the split-process payoff).
+
+Transport era: a committed image taken at N ranks restores at M ranks
+through `repro.restore_world(image, plan)` — per-rank array shards
+round-tripped through their logical axes, protocol state (comm
+memberships, collective counts, drained in-flight messages) remapped
+under the plan's old->new rank numbering, the supervisor relaunching at
+whatever capacity survives.  Covers shrink, grow, uneven divisors,
+replicated + sharded + ZeRO-1 leaves, both transports, cross-transport
+shrink, the typed `WorldMismatchError` on every layer (plan, bind,
+coordinator HELLO), and a property fuzz over (N, M, leaf shapes).
+
+Mesh era (slow, bottom of file): the same checkpoint restores across
+jax mesh factorizations; runs in a subprocess so the fake-device XLA
+flag never leaks into other tests."""
 import json
 import os
 import subprocess
 import sys
+import time
+import warnings
 
+import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    from _hypothesis_fallback import given, settings, st
+
+from repro import (RestorePlan, WorldMismatchError, parse_restore_spec,
+                   restore_world)
+from repro.comm.transport import FaultPlan
+from repro.comm.transport.harness import (restore_agent_from_blob,
+                                          run_world, run_world_supervised)
+from repro.core.codec import (ImageIntegrityError, SnapshotCodec,
+                              image_from_bytes, image_to_bytes)
+from repro.core.split_state import leaf_shard_dim, reshard_state
+from repro.core.virtual import comm_gid
+
+TRANSPORTS = ("inproc", "socket")
+
+
+# ---------------------------------------------------------------------------
+# RestorePlan: the remapping itself
+# ---------------------------------------------------------------------------
+
+def test_plan_mod_fold_shrink():
+    plan = RestorePlan.between(64, 61)
+    assert plan.rank_map[60] == 60 and plan.rank_map[61] == 0
+    assert plan.rank_map[62] == 1 and plan.rank_map[63] == 2
+    assert plan.owned(0) == (0, 61) and plan.owned(3) == (3,)
+    assert plan.remap_members(range(64)) == tuple(range(61))
+    assert not plan.is_identity
+
+
+def test_plan_grow_cold_tail():
+    plan = RestorePlan.between(61, 64)
+    assert all(plan.rank_map[r] == r for r in range(61))
+    assert plan.owned(61) == () and plan.owned(63) == ()
+    assert plan.remap_members(range(61)) == tuple(range(64))
+
+
+def test_plan_subset_membership_remap():
+    plan = RestorePlan.between(8, 3)
+    # non-world comms map member-wise; collapsed members deduplicate
+    assert plan.remap_members((0, 3, 6)) == (0,)   # all fold onto new 0
+    assert plan.remap_members((1, 5)) == (1, 2)
+    assert plan.remap_members((2, 4)) == (1, 2)
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        RestorePlan(0, 4)
+    with pytest.raises(ValueError):
+        RestorePlan(2, 2, rank_map={0: 0})          # incomplete
+    with pytest.raises(ValueError):
+        RestorePlan(2, 2, rank_map={0: 0, 1: 5})    # out of range
+    with pytest.raises(WorldMismatchError):
+        RestorePlan.for_image({"epoch": 1, "ranks": {}}, 4)
+
+
+def test_parse_restore_spec_rejects_garbage():
+    for bad in ("", "@", "x@inproc", "0@inproc", "-3"):
+        with pytest.raises(ValueError):
+            parse_restore_spec(bad)
+
+
+def test_plan_spec_survives_image_container():
+    plan = RestorePlan.between(4, 3, "socket")
+    img = plan.attach({"epoch": 2, "n_ranks": 4, "ranks": {}})
+    back = image_from_bytes(image_to_bytes(img))
+    rw = restore_world(back)
+    assert rw.plan == plan
+
+
+# ---------------------------------------------------------------------------
+# the array data plane: logical-axis reshard round trips
+# ---------------------------------------------------------------------------
+
+def _sharded_image(n, G, *, step=0, transport="inproc", zero1=False):
+    """A committed-style image: x sharded on "batch", rep replicated,
+    and (optionally) a ZeRO-1 optimizer leaf with no logical batch dim."""
+    codec = SnapshotCodec()
+    full = np.arange(G, dtype=np.float64) + step
+    xs = np.array_split(full, n)
+    opt = np.arange(2 * G, dtype=np.float32).reshape(G, 2)
+    opts = np.array_split(opt, n, axis=0)
+    ranks = {}
+    for r in range(n):
+        arrays = {"x": xs[r], "rep": np.full((), float(step))}
+        logical = {"x": ["batch"], "rep": []}
+        zkeys = []
+        if zero1:
+            arrays["opt"] = opts[r]
+            logical["opt"] = [None, None]
+            zkeys = ["opt"]
+        ranks[str(r)] = codec.encode(1, arrays, extra={
+            "step": step, "logical": logical, "zero1_keys": zkeys,
+            "agent": _agent_blob(r, n, transport=transport)})
+    return {"epoch": 1, "n_ranks": n, "ranks": ranks}
+
+
+def _agent_blob(rank, n, *, transport="inproc", counts=None, drains=()):
+    world = tuple(range(n))
+    return {"rank": rank, "transport": transport,
+            "comms": {"comms": {"1": list(world)}, "next": 2},
+            "requests": {"requests": {}, "next": 1},
+            "coll_counts": {str(comm_gid(world)):
+                            (5 if counts is None else counts)},
+            "drain_buffer": [(s, d, t, p) for s, d, t, p in drains]}
+
+
+@pytest.mark.parametrize("n_from,n_to", [(64, 61), (61, 64), (8, 3)])
+def test_reshard_round_trip(n_from, n_to):
+    G = 2 * max(n_from, n_to)
+    rw = restore_world(_sharded_image(n_from, G, step=7, zero1=True),
+                       RestorePlan.between(n_from, n_to))
+    shards = rw.reshard()
+    assert len(shards) == n_to
+    # sharded leaf: concatenation is bit-identical to the logical array
+    full = np.concatenate([s["x"] for s in shards])
+    assert np.array_equal(full, np.arange(G, dtype=np.float64) + 7)
+    # shard sizes follow array_split (uneven divisors exact, no padding)
+    want = [a.shape for a in
+            np.array_split(np.arange(G), n_to)]
+    assert [s["x"].shape for s in shards] == want
+    # replicated leaf: present and equal on every new rank
+    assert all(float(s["rep"].reshape(())) == 7.0 for s in shards)
+    # ZeRO-1 leaf: split along its first unsharded dim, exactly
+    opt = np.concatenate([s["opt"] for s in shards], axis=0)
+    assert np.array_equal(
+        opt, np.arange(2 * G, dtype=np.float32).reshape(G, 2))
+
+
+def test_reshard_rejects_divergent_replicated_leaf():
+    per_rank = [{"r": np.zeros(3)}, {"r": np.ones(3)}]
+    with pytest.raises(ImageIntegrityError):
+        reshard_state(per_rank, {"r": [None]}, 3)
+
+
+def test_reshard_rejects_missing_sharded_leaf():
+    per_rank = [{"x": np.zeros(3)}, {}]
+    with pytest.raises(ImageIntegrityError):
+        reshard_state(per_rank, {"x": ["batch"]}, 2)
+
+
+def test_leaf_shard_dim_choices():
+    assert leaf_shard_dim(["batch"], (8,), 4) == 0
+    assert leaf_shard_dim([None, "batch"], (2, 8), 4) == 1
+    assert leaf_shard_dim([None], (8,), 4) is None
+    assert leaf_shard_dim([None, None], (7, 2), 4, zero1=True) == 0
+    assert leaf_shard_dim([], (), 4) is None
+
+
+# ---------------------------------------------------------------------------
+# protocol-state remapping
+# ---------------------------------------------------------------------------
+
+def test_remap_agent_blob_rekeys_counts_and_drains():
+    plan = RestorePlan.between(4, 3)
+    blob = _agent_blob(3, 4, counts=9,
+                       drains=[(2, 3, 0, "aa"), (0, 3, 1, "bb")])
+    out = plan.remap_agent_blob(blob)
+    assert out["rank"] == 0
+    assert out["comms"]["comms"]["1"] == [0, 1, 2]
+    old_gid, new_gid = comm_gid(tuple(range(4))), comm_gid(tuple(range(3)))
+    assert str(old_gid) not in out["coll_counts"]
+    assert out["coll_counts"][str(new_gid)] == 9
+    assert out["drain_buffer"] == [(2, 0, 0, "aa"), (0, 0, 1, "bb")]
+
+
+def test_remap_drops_freed_comm_residual_counts():
+    plan = RestorePlan.between(4, 2)
+    blob = _agent_blob(0, 4)
+    blob["coll_counts"][str(comm_gid((9, 10)))] = 3  # freed comm's gid
+    out = plan.remap_agent_blob(blob)
+    assert str(comm_gid((9, 10))) not in out["coll_counts"]
+
+
+def test_drains_for_folds_secondary_backlog():
+    # shrink 4 -> 3: new rank 0 owns old {0, 3}; both old drains whose
+    # remapped destination is 0 must land in its replay list
+    image = {"epoch": 1, "n_ranks": 4, "ranks": {
+        str(r): {"agent": _agent_blob(
+            r, 4, drains=[((r - 1) % 4, r, 0, "ab")])} for r in range(4)}}
+    rw = restore_world(image, RestorePlan.between(4, 3))
+    drains = rw.drains_for(0)
+    # old 0's backlog (from old 3 -> new 0) + old 3's (from old 2 -> 2)
+    assert sorted(d[:2] for d in drains) == [(0, 0), (2, 0)]
+    assert rw.drains_for(2) == [(1, 2, 0, "ab")]
+
+
+# ---------------------------------------------------------------------------
+# typed mismatch on every layer
+# ---------------------------------------------------------------------------
+
+def test_restore_world_rejects_wrong_plan_source():
+    img = _sharded_image(4, 8)
+    with pytest.raises(WorldMismatchError):
+        restore_world(img, RestorePlan.between(3, 2))
+
+
+def test_restore_world_requires_world_size():
+    with pytest.raises(WorldMismatchError):
+        restore_world({"epoch": 1, "ranks": {}})
+
+
+def test_bind_rejects_wrong_live_world():
+    rw = restore_world(_sharded_image(2, 4),
+                       RestorePlan.between(2, 3))
+
+    def work(ctx):
+        with pytest.raises(WorldMismatchError):
+            rw.bind(ctx)
+        return True
+
+    res = run_world("inproc", 2, work)
+    assert all(res.results.values())
+
+
+def test_coordinator_hello_rejects_mismatch():
+    def work(ctx):
+        assert ctx.coord.hello(5, 2) == 2   # n_from may differ freely
+        with pytest.raises(WorldMismatchError):
+            ctx.coord.hello(2, 3)           # n_to must match the world
+        return True
+
+    res = run_world("inproc", 2, work)
+    assert all(res.results.values())
+
+
+# ---------------------------------------------------------------------------
+# live elastic bind: shrink / grow / cross-transport, both backends
+# ---------------------------------------------------------------------------
+
+def _live_elastic_roundtrip(rw, transport):
+    """Bind `rw` into a live world: replay the remapped backlog, run a
+    world collective, then COMMIT a checkpoint — the closure only works
+    if every rank's (remapped or cold-seeded) collective counts agree."""
+    def work(ctx):
+        a = ctx.agent
+        owned = rw.bind(ctx)
+        got = [a.recv(src, tag=tag, timeout=60).payload
+               for src, _dst, tag, _ in rw.drains_for(ctx.rank)]
+        assert len(ctx.ep.drain_buffer) == 0
+        if ctx.rank == 0:
+            ctx.coord.request_checkpoint()
+        for _ in range(4):
+            total = a.allreduce(a.world_comm, 1, lambda x, y: x + y)
+            assert total == ctx.n
+            if a._ckpt_pending():
+                a.safe_point(lambda: None)
+        a.barrier_op(a.world_comm)
+        while a._ckpt_pending():
+            a.safe_point(lambda: None)
+            time.sleep(0.002)
+        return {"owned": sorted(owned), "replayed": len(got)}
+
+    res = run_world(transport, rw.plan.n_to, work, timeout=120)
+    assert res.coord_stats["checkpoints"] == 1
+    return res.results
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_live_shrink_folds_state(transport):
+    n_from, n_to = 4, 3
+    image = {"epoch": 1, "n_ranks": n_from, "ranks": {
+        str(r): {"agent": _agent_blob(
+            r, n_from, drains=[((r - 1) % n_from, r, 0, "0fee")])}
+        for r in range(n_from)}}
+    rw = restore_world(image, RestorePlan.between(n_from, n_to, transport))
+    results = _live_elastic_roundtrip(rw, transport)
+    assert results[0]["owned"] == [0, 3] and results[0]["replayed"] == 2
+    assert results[1]["owned"] == [1] and results[1]["replayed"] == 1
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_live_grow_seeds_cold_ranks(transport):
+    n_from, n_to = 3, 4
+    image = {"epoch": 1, "n_ranks": n_from, "ranks": {
+        str(r): {"agent": _agent_blob(r, n_from)}
+        for r in range(n_from)}}
+    rw = restore_world(image, RestorePlan.between(n_from, n_to, transport))
+    results = _live_elastic_roundtrip(rw, transport)
+    # the grown rank is cold (owns nothing) but the commit above proves
+    # its seeded world count equalized with the survivors'
+    assert results[3]["owned"] == [] and results[3]["replayed"] == 0
+    assert results[0]["owned"] == [0]
+
+
+def test_cross_transport_shrink_socket_to_inproc():
+    n_from, n_to = 4, 2
+    image = {"epoch": 1, "n_ranks": n_from, "ranks": {
+        str(r): {"agent": _agent_blob(r, n_from, transport="socket")}
+        for r in range(n_from)}}
+    rw = restore_world(image, RestorePlan.between(n_from, n_to, "inproc"))
+    results = _live_elastic_roundtrip(rw, "inproc")
+    assert results[0]["owned"] == [0, 2]
+    assert results[1]["owned"] == [1, 3]
+
+
+# ---------------------------------------------------------------------------
+# elastic supervisor: shrink to the survivors, grow back on capacity
+# ---------------------------------------------------------------------------
+
+def test_supervised_elastic_shrink_then_grow():
+    n, target = 4, 8
+    G = 2 * n
+
+    def fn_factory(attempt, image):
+        rw = None if image is None else restore_world(image)
+        shards = None if rw is None else rw.reshard()
+
+        def work(ctx):
+            a, r, wn = ctx.agent, ctx.rank, ctx.n
+            if rw is None:
+                x = np.array_split(
+                    np.arange(G, dtype=np.float64), wn)[r].copy()
+                start = 0
+            else:
+                rw.bind(ctx)
+                for src, _dst, tag, _ in rw.drains_for(r):
+                    a.recv(src, tag=tag, timeout=60)
+                x = shards[r]["x"].copy()
+                start = int(rw.state(0)["step"]) + 1
+                assert np.array_equal(x, np.array_split(
+                    np.arange(G, dtype=np.float64) + start, wn)[r])
+            step = start
+
+            def snapshot():
+                codec = SnapshotCodec()
+                ctx.coord.ship_snapshot(a.ckpt_epoch, codec.encode(
+                    a.ckpt_epoch, {"x": x.copy(), "rep": np.zeros(())},
+                    extra={"step": step, "logical": {"x": ["batch"],
+                                                     "rep": []},
+                           "agent": a.serialize()}))
+
+            for step in range(start, target):
+                if r == 0 and step == start + 1:
+                    ctx.coord.request_checkpoint()
+                a.allreduce(a.world_comm, 1, lambda p, q: p + q)
+                x += 1.0
+                pending = a._ckpt_pending()
+                if ctx.faults is not None:
+                    ctx.faults.on_step(r, step, ckpt_pending=pending)
+                if pending:
+                    a.safe_point(snapshot)
+            a.barrier_op(a.world_comm)
+            while a._ckpt_pending():
+                a.safe_point(snapshot)
+                time.sleep(0.002)
+            return {"x": x.tolist()}
+
+        return work
+
+    schedule = {0: FaultPlan(0).kill(2, at_step=5),
+                1: FaultPlan(1).kill(1, at_step=6)}
+    sup = run_world_supervised(
+        "inproc", n, fn_factory, max_restarts=3, elastic=True,
+        faults_for_attempt=lambda a: schedule.get(a),
+        capacity_for_attempt=lambda a, rf: n if a >= 2 else None,
+        timeout=120)
+    # shrank to the survivors, then grew back on returned capacity
+    assert sup.final_n == n
+    assert [f["n"] for f in sup.failures] == [n, n - 1]
+    full = np.concatenate([np.asarray(sup.result.results[r]["x"])
+                           for r in range(n)])
+    assert np.array_equal(full, np.arange(G, dtype=np.float64) + target)
+
+
+def test_elastic_chaos_example_end_to_end(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable,
+         os.path.join(os.path.dirname(__file__), "..", "examples",
+                      "multirank_simulation.py"),
+         "--elastic", "--quick", "--ranks", "6", "--kills", "2",
+         "--seed", "5", "--log-dir", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "PASS" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims
+# ---------------------------------------------------------------------------
+
+def test_restore_agent_from_blob_shim_warns_once():
+    import repro.core.restore as restore_mod
+    restore_mod._warned.discard("restore_agent_from_blob")
+    blob = _agent_blob(0, 2, drains=[(1, 0, 0, "beef")])
+
+    def work(ctx):
+        if ctx.rank == 0:
+            with warnings.catch_warnings(record=True) as w:
+                warnings.simplefilter("always")
+                restore_agent_from_blob(ctx, blob)
+                restore_agent_from_blob(ctx, blob)
+            return sum(issubclass(x.category, DeprecationWarning)
+                       for x in w)
+        return -1
+
+    res = run_world("inproc", 2, work)
+    assert res.results[0] == 1   # one-shot warning, still functional
+
+
+def test_deprecated_flag_spellings_translate(capsys):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "examples"))
+    import multirank_simulation as sim
+
+    # the one shared helper: new spellings pass through untranslated
+    args = sim.parse_args(["--transport", "socket",
+                           "--restore-to", "61@inproc",
+                           "--restore-to", "@socket"])
+    assert sim.resolve_restore_flags(args) == (
+        "socket", [(61, "inproc"), (None, "socket")])
+    assert capsys.readouterr().err == ""
+    # deprecated spellings map onto the same (transport, specs) shape,
+    # with a notice per flag on stderr
+    args = sim.parse_args(["--transport-a", "inproc",
+                           "--transport-b", "socket"])
+    assert sim.resolve_restore_flags(args) == ("inproc",
+                                               [(None, "socket")])
+    err = capsys.readouterr().err
+    assert err.count("DEPRECATED") == 2
+    # --flip-transport alone still produces an alternating cycle
+    args = sim.parse_args(["--chaos", "--flip-transport",
+                           "--transport", "socket"])
+    assert sim.resolve_restore_flags(args) == ("socket",
+                                               [(None, "inproc")])
+    assert "DEPRECATED" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# property fuzz: (N, M, leaf shapes)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 9), st.integers(1, 40),
+       st.integers(1, 3))
+def test_fuzz_reshard_is_exact(n_from, n_to, g, width):
+    full = np.arange(g * width, dtype=np.float32).reshape(g, width)
+    per_rank = [{"x": s, "r": np.ones(2)}
+                for s in np.array_split(full, n_from, axis=0)]
+    out = reshard_state(per_rank, {"x": ["batch", None], "r": [None]},
+                        n_to)
+    assert len(out) == n_to
+    assert np.array_equal(
+        np.concatenate([s["x"] for s in out], axis=0), full)
+    # double round trip lands exactly on the original shards
+    back = reshard_state(out, {"x": ["batch", None], "r": [None]}, n_from)
+    for a, b in zip(back, per_rank):
+        assert np.array_equal(a["x"], b["x"])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 12))
+def test_fuzz_plan_invariants(n_from, n_to):
+    plan = RestorePlan.between(n_from, n_to)
+    # every old rank folds somewhere; every new rank <= n_from is owned
+    owned = [plan.owned(r) for r in range(n_to)]
+    assert sorted(o for own in owned for o in own) == list(range(n_from))
+    for r in range(min(n_from, n_to)):
+        assert owned[r] and owned[r][0] == r   # identity-mapped primary
+    assert plan.remap_members(range(n_from)) == tuple(range(n_to))
 
 SCRIPT = r"""
 import os
