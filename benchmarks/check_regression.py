@@ -25,6 +25,12 @@ cancels out):
   * binary snapshot-image bytes <= IMAGE_BYTES_FACTOR (0.7x) the
     legacy JSON/base64 baseline (ISSUE 5: base64 inflation removed,
     shuffle filter gains)
+  * the durable image store attached to a run (background uploads +
+    an aggressive compactor folding chains mid-run) keeps the sync
+    checkpoint stall within 1.5x + 5ms of the plain sync stall from
+    the same run, the compactor must actually have folded an epoch,
+    and restore-from-compacted must be bit-identical to
+    restore-from-chain (ISSUE 10)
   * transport invariance: where the run carries records for the same
     (n, algo) point on more than one transport backend, the VIRTUAL
     per-iteration latencies must agree to within 0.1% — the occupancy
@@ -63,6 +69,9 @@ _COVERED = {
     "wire_codec_throughput": ("codec", "payload_kb"),
     "image_codec_throughput": ("codec", "level"),
     "elastic_restore_latency": ("n_from", "n_to"),
+    "ckpt_stall_store": ("n", "mode"),
+    "compaction_throughput": ("n", "chain_len"),
+    "store_restore_latency": ("n", "tier"),
 }
 
 
@@ -215,6 +224,69 @@ def main() -> int:
             failures.append(
                 f"binary snapshot images are {r:.3f}x the JSON/base64 "
                 f"baseline (required <= {args.image_bytes_factor}x)")
+
+    # ISSUE 10: the durable tier may not stall ranks.  The sync stall
+    # WITH the store + background compactor attached is compared to the
+    # plain sync stall from the SAME fresh run (host speed cancels) —
+    # 1.5x + 5ms slack, because both stalls are wall-clock and the
+    # store run also carries the compactor's CPU contention.  The
+    # record must additionally prove the compactor really folded an
+    # epoch mid-run, or the comparison measures nothing.
+    stall_store = _match(cur, name="ckpt_stall_store", n=GUARD_N,
+                         mode="sync")
+    if stall_sync and stall_store:
+        p_us = stall_sync[0]["stall_us_per_ckpt"]
+        w_us = stall_store[0]["stall_us_per_ckpt"]
+        p_ck = stall_sync[0].get("ckpts")
+        w_ck = stall_store[0].get("ckpts")
+        print(f"ckpt stall+store n={GUARD_N}: plain {p_us:.0f}us "
+              f"({p_ck} ckpts), with store {w_us:.0f}us ({w_ck} ckpts, "
+              f"{w_us / max(p_us, 1e-9):.2f}x)")
+        if p_ck != w_ck:
+            # the first round encodes a FULL image, later rounds
+            # deltas, so per-ckpt stalls from runs that caught a
+            # different number of rounds are not comparable — the
+            # baseline-relative guard below still rates the store arm
+            print(f"  (round counts differ — same-run comparison "
+                  f"skipped, baseline guard still applies)")
+        elif w_us > max(1.5 * p_us, p_us + 5000):
+            failures.append(
+                f"durable store attached to the run regressed the sync "
+                f"checkpoint stall at {GUARD_N} ranks: {p_us:.0f}us -> "
+                f"{w_us:.0f}us (limit 1.5x + 5ms slack)")
+        if not stall_store[0].get("compacted_epochs"):
+            failures.append(
+                "ckpt_stall_store run finished without the background "
+                "compactor folding any epoch — the no-stall claim was "
+                "not exercised")
+    # ...and the store-attached stall is a wall measure, so it also
+    # gets the standard FACTOR guard against its own committed
+    # baseline record: compaction starting to stall ranks shows up
+    # here even when the same-run comparison above was skipped
+    b_store = _match(base, name="ckpt_stall_store", n=GUARD_N,
+                     mode="sync")
+    if b_store and stall_store:
+        b_us = b_store[0]["stall_us_per_ckpt"]
+        c_us = stall_store[0]["stall_us_per_ckpt"]
+        print(f"store ckpt stall n={GUARD_N}: baseline {b_us:.0f}us, "
+              f"current {c_us:.0f}us ({c_us / b_us:.2f}x)")
+        if c_us > args.factor * b_us:
+            failures.append(
+                f"64-rank store-attached checkpoint stall regressed "
+                f"{c_us / b_us:.2f}x vs baseline (limit {args.factor}x): "
+                f"{b_us:.0f}us -> {c_us:.0f}us")
+
+    # ISSUE 10: compaction must leave restore bit-identical — the
+    # benchmark compares restore-from-chain to restore-from-compacted
+    # array-for-array and records the verdict; any False fails the run
+    for rec in _match(cur, name="compaction_throughput"):
+        print(f"compaction       n={rec['n']} chain={rec['chain_len']}: "
+              f"{rec['mb_per_s']:.1f} MB/s, "
+              f"bit_identical={rec['bit_identical']}")
+        if rec.get("bit_identical") is not True:
+            failures.append(
+                f"compacted restore is not bit-identical to the chain "
+                f"restore (n={rec['n']}, chain_len={rec['chain_len']})")
 
     # ISSUE 6: same-world restarts now go through the unified
     # restore_world path — the (64, 64) identity record must stay

@@ -24,6 +24,15 @@ simulated fabric (CSV rows; collected by benchmarks.run).
       virtual-time model rides in the transport-agnostic Endpoint, so
       per-transport numbers are directly comparable — identical rank
       counts must produce identical virtual rates on every backend.
+  store_checkpoint_stall — the sync checkpoint stall with the durable
+      image store attached and an aggressive background compactor
+      folding delta chains mid-run (ISSUE 10).  Guarded
+      machine-relatively against the plain sync ckpt_stall from the
+      same run: launcher-side uploads + compaction may not stall ranks.
+  image_store_benchmarks — compaction throughput on synthetic
+      collector-shaped chain epochs (the record carries the
+      bit-identical restore proof the guard asserts) plus tiered store
+      restore latency: chain / compacted / fallback (ISSUE 10).
   wire_codec_throughput — frame v2 (struct header + vectored payload)
       vs the legacy v1 pickle framing, encode/decode MB/s on app-sized
       payloads.  Guarded: v2 encode >= 3x v1 (it is O(1) in the
@@ -57,6 +66,7 @@ import json
 import shutil
 import tempfile
 import time
+import warnings
 from typing import Dict, List, Optional
 
 from benchmarks.workloads import run_simulated_job
@@ -575,6 +585,193 @@ def checkpoint_pipeline(transport: str = "inproc", ranks=(64,),
                     "name": "ckpt_image_bytes", "transport": transport,
                     "n": n, "encoding": enc, "bytes_per_rank_ckpt": mean_b,
                     "shard_kb": shard_kb, "mutate_frac": mutate_frac})
+    return rows
+
+
+def store_checkpoint_stall(transport: str = "inproc", n: int = 64,
+                           shard_kb: int = 64, steps: int = 9,
+                           every: int = 3, mutate_frac: float = 0.01,
+                           results: Optional[List[Dict]] = None) -> List[str]:
+    """ISSUE 10: the SYNC checkpoint stall with the durable tier
+    attached — committed epochs upload through the collector's
+    background uploader and an aggressive background compactor
+    (interval 50ms, fold any chain) folds XOR-delta epochs into full
+    images WHILE ranks are still stepping.  Both the store upload and
+    the compaction are pure launcher-side work, so the per-rank stall
+    must stay in family with the plain `ckpt_stall` sync record from
+    the same fresh run — check_regression.py compares the two
+    machine-relatively (<= 1.5x + 5ms slack) and requires that the
+    compactor actually folded an epoch during the run."""
+    from repro.comm.transport.harness import run_world
+    from repro.core.image_store import open_store
+
+    sp_timeout = max(60.0, n * 0.5)
+    store_dir = tempfile.mkdtemp(prefix="bench-ckpt-store-")
+    store = open_store(store_dir, retain=2)
+    store.start_compactor(interval_s=0.05, chain_threshold=1)
+    try:
+        res = run_world(
+            transport, n,
+            _ckpt_pipeline_worker(n, shard_kb, steps, every, False,
+                                  mutate_frac, sp_timeout=sp_timeout),
+            store=store, retain_epochs=2, unblock_window=0.5,
+            timeout=max(300.0, n * 1.2))
+        stalls = [s for v in res.results.values() for s in v["stalls"]]
+        ckpts = res.coord_stats["checkpoints"]
+        stall_us = 1e6 * sum(stalls) / max(len(stalls), 1)
+        # give the 50ms compactor a beat to fold the final delta epoch;
+        # the guard needs at least one fold to have really happened
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            compacted = [e for e in store.epochs()
+                         if store.manifest(e).get("compacted")]
+            if compacted:
+                break
+            time.sleep(0.05)
+        assert compacted, \
+            "background compactor never folded a delta epoch"
+        assert store.errors == [], f"store errors: {store.errors}"
+        store.load_newest_verified()  # the folded epochs must restore
+    finally:
+        store.stop()
+        shutil.rmtree(store_dir, ignore_errors=True)
+    rows = [f"ckpt_stall_store_sync_{transport}_n{n},{stall_us:.0f},"
+            f"ckpts={ckpts};compacted={len(compacted)}"]
+    if results is not None:
+        results.append({
+            "name": "ckpt_stall_store", "transport": transport, "n": n,
+            "mode": "sync", "stall_us_per_ckpt": stall_us, "ckpts": ckpts,
+            "shard_kb": shard_kb, "compacted_epochs": len(compacted)})
+    return rows
+
+
+def image_store_benchmarks(n: int = 16, shard_kb: int = 64,
+                           chain_len: int = 6, repeats: int = 3,
+                           results: Optional[List[Dict]] = None) -> List[str]:
+    """ISSUE 10: launcher-side costs of the durable tiered image store,
+    on synthetic chain epochs shaped exactly like the collector ships
+    them (epoch 1 full, later epochs XOR deltas carrying their
+    transitive chain):
+
+      * compaction_throughput — folding the newest epoch's delta
+        chains into fresh full blobs (decode chain + re-encode +
+        bit-identical proof + upload), MB/s over the folded chain
+        bytes.  The record carries `bit_identical`, computed by
+        comparing every rank's restore-from-chain arrays against its
+        restore-from-compacted arrays — the perf guard fails unless it
+        is true.
+      * store_restore_latency — `load()` + per-rank chain decode, best
+        of `repeats`, per tier: "chain" (newest epoch via its delta
+        chain), "compacted" (the same epoch after compaction), and
+        "fallback" (newest epoch's blobs corrupted;
+        `load_newest_verified` walks back a generation).
+    """
+    import numpy as np
+
+    from repro.core.codec import SnapshotCodec, restore_rank_arrays
+    from repro.core.image_store import (EpochFallbackWarning, EpochStore,
+                                        LocalDirStore)
+
+    codec = SnapshotCodec()
+    per = shard_kb * 1024 // 8            # float64 elements per rank
+    rng = np.random.RandomState(3)
+    arrays = {r: {"x": rng.randn(per)} for r in range(n)}
+    blobs: Dict[int, Dict[int, bytes]] = {r: {} for r in range(n)}
+    epochs = list(range(1, chain_len + 1))
+    mut = max(1, per // 100)              # ~1% of the shard per epoch
+    store_dir = tempfile.mkdtemp(prefix="bench-image-store-")
+    store = EpochStore(LocalDirStore(store_dir), retain=chain_len + 1)
+    rows: List[str] = []
+    try:
+        for i, epoch in enumerate(epochs):
+            image = {"epoch": epoch, "n_ranks": n, "ranks": {},
+                     "chains": {}}
+            for r in range(n):
+                prev = arrays[r]
+                nxt = dict(prev, x=prev["x"].copy())
+                lo = (epoch * mut) % (per - mut)
+                nxt["x"][lo:lo + mut] += 1.0
+                arrays[r] = nxt
+                if i == 0:
+                    blob = codec.encode(epoch, nxt, extra={"step": epoch})
+                else:
+                    blob = codec.encode(epoch, nxt,
+                                        base=(epochs[i - 1], prev),
+                                        extra={"step": epoch})
+                    image["chains"][r] = {e: blobs[r][e]
+                                          for e in epochs[:i]}
+                blobs[r][epoch] = blob
+                image["ranks"][r] = blob
+            store.commit(image)
+        newest = epochs[-1]
+
+        def timed_restore(label):
+            best, got = None, None
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                img = store.load(newest)
+                got = {r: restore_rank_arrays(img, r, codec)[0]
+                       for r in img["ranks"]}
+                dt = time.perf_counter() - t0
+                best = dt if best is None else min(best, dt)
+            us = 1e6 * best
+            rows.append(f"store_restore_{label}_n{n},{us:.0f},"
+                        f"shard_kb={shard_kb}")
+            if results is not None:
+                results.append({"name": "store_restore_latency",
+                                "transport": "inproc", "n": n,
+                                "tier": label, "shard_kb": shard_kb,
+                                "restore_us": us})
+            return got
+
+        from_chain = timed_restore("chain")
+
+        folded = sum(len(blobs[r][e]) for r in range(n) for e in epochs)
+        t0 = time.perf_counter()
+        store.compact(newest)
+        wall = time.perf_counter() - t0
+        assert store.chain_len(newest) == 0
+        from_compacted = timed_restore("compacted")
+        bit_identical = all(
+            np.array_equal(from_chain[r][name], arr)
+            for r in from_chain for name, arr in from_compacted[r].items())
+        mb = folded / 1e6
+        rows.append(f"compaction_throughput_n{n},,mb_per_s="
+                    f"{mb / wall:.1f};bit_identical={bit_identical}")
+        if results is not None:
+            results.append({
+                "name": "compaction_throughput", "transport": "inproc",
+                "n": n, "chain_len": chain_len - 1, "shard_kb": shard_kb,
+                "folded_mb": mb, "mb_per_s": mb / wall,
+                "bit_identical": bool(bit_identical)})
+
+        # fallback tier: every blob of the newest epoch corrupted; the
+        # walk-back is repeatable because load_newest_verified only
+        # warns — scrub (not run here) is what quarantines
+        for rec in store.manifest(newest)["blobs"].values():
+            store.backend.put(rec["key"], b"\x00garbage")
+        best = None
+        for _ in range(repeats):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", EpochFallbackWarning)
+                t0 = time.perf_counter()
+                img = store.load_newest_verified()
+                for r in img["ranks"]:
+                    restore_rank_arrays(img, r, codec)
+                dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        assert img["epoch"] == epochs[-2], \
+            "fallback must land exactly one generation back"
+        us = 1e6 * best
+        rows.append(f"store_restore_fallback_n{n},{us:.0f},"
+                    f"shard_kb={shard_kb}")
+        if results is not None:
+            results.append({"name": "store_restore_latency",
+                            "transport": "inproc", "n": n,
+                            "tier": "fallback", "shard_kb": shard_kb,
+                            "restore_us": us})
+    finally:
+        shutil.rmtree(store_dir, ignore_errors=True)
     return rows
 
 

@@ -8,9 +8,11 @@ Flags:
   --smoke           protocol-only benchmark subset for CI: fig4 + barrier
                     at {4, 8, 64} ranks plus the 512-rank scale arms
                     (collective rates + checkpoint pipeline), drain
-                    scaling, and the wire/image codec throughput records
-                    — skips the jax-heavy fig2/fig3/kernel/roofline
-                    suites
+                    scaling, the durable-store arms (store-attached
+                    ckpt stall, compaction throughput, tiered restore
+                    latency), and the wire/image codec throughput
+                    records — skips the jax-heavy
+                    fig2/fig3/kernel/roofline suites
   --transport T     which fabric backend(s) to benchmark: "inproc"
                     (default; the guarded baseline records), "socket"
                     (one-process-per-rank collective rates through the
@@ -76,14 +78,26 @@ def main() -> None:
         rows += protocol_benchmarks.elastic_restore_latency(
             results=results)
         # the ISSUE-4 guarded records: stall sync vs async + image
-        # bytes full vs delta at the 64-rank guard point
+        # bytes full vs delta at the 64-rank guard point.  steps=12
+        # gives three request windows — on a slow host the sync arm's
+        # step-6 request can coalesce into the still-open first round,
+        # and the delta-bytes record needs a second round to exist
         rows += protocol_benchmarks.checkpoint_pipeline(
-            "inproc", ranks=(64,), results=results)
+            "inproc", ranks=(64,), steps=12, results=results)
         # the 512-rank scale arm (ISSUE 5): one checkpoint round per
         # mode, smaller shards — the records prove the pipeline closes
         # and commits at 512 GIL-bound ranks, the guards ride on n=64
         rows += protocol_benchmarks.checkpoint_pipeline(
             "inproc", ranks=(512,), shard_kb=16, steps=4, every=2,
+            results=results)
+        # the ISSUE-10 guarded records: sync stall with the durable
+        # store + background compactor attached (must stay in family
+        # with the plain sync stall above, same run), compaction
+        # throughput with the bit-identical restore proof, and the
+        # chain/compacted/fallback store restore tiers
+        rows += protocol_benchmarks.store_checkpoint_stall(
+            "inproc", n=64, steps=12, results=results)
+        rows += protocol_benchmarks.image_store_benchmarks(
             results=results)
         # the ISSUE-5 codec guards: frame v2 vs pickle, binary image
         # containers vs JSON/base64
@@ -118,6 +132,11 @@ def main() -> None:
             rows += protocol_benchmarks.checkpoint_pipeline(
                 "inproc", ranks=(512,), shard_kb=16, steps=4, every=2,
                 results=results)
+        rows += protocol_benchmarks.store_checkpoint_stall(
+            "inproc", n=8 if quick else 64, steps=12, results=results)
+        rows += protocol_benchmarks.image_store_benchmarks(
+            n=4 if quick else 16, chain_len=4 if quick else 6,
+            results=results)
         rows += protocol_benchmarks.wire_codec_throughput(results=results)
         rows += protocol_benchmarks.image_codec_throughput(results=results)
         rows += kernel_bench.kernel_throughput(mb=4 if quick else 16)

@@ -19,6 +19,10 @@ Checks (each also run as a tier-1 test via tests/test_docs.py):
      `repro.core.codec.IMAGE_FIELDS` (ISSUE 6: the `n_ranks` and
      `remap` fields the elastic restore path depends on stay
      documented in lockstep with the code).
+  6. PROTOCOL.md's store-manifest-fields table == the registry
+     `repro.core.image_store.MANIFEST_FIELDS`, plus the current
+     MANIFEST_FORMAT is stated (ISSUE 10: the durable store's commit
+     record cannot drift from the docs).
 
 Usage:  python docs/check_docs_drift.py   (exit 1 on any drift)
 """
@@ -148,6 +152,35 @@ def check_image_container_fields() -> list:
     return errors
 
 
+def check_manifest_fields() -> list:
+    """PROTOCOL.md manifest table vs repro.core.image_store
+    MANIFEST_FIELDS (ISSUE 10: the durable store's commit record)."""
+    from repro.core.image_store import MANIFEST_FIELDS, MANIFEST_FORMAT
+    errors = []
+    text = _read("docs", "PROTOCOL.md")
+    anchor = "## Store manifest fields"
+    if anchor not in text:
+        return [f"PROTOCOL.md is missing the {anchor!r} section"]
+    doc = set()
+    for cells in _md_table_rows(text, anchor):
+        m = re.match(r"`([a-z_]+)`", cells[0])
+        if m:
+            doc.add(m.group(1))
+    for f in sorted(set(MANIFEST_FIELDS) - doc):
+        errors.append(f"PROTOCOL.md manifest table is missing field "
+                      f"{f!r} (present in image_store.MANIFEST_FIELDS)")
+    for f in sorted(doc - set(MANIFEST_FIELDS)):
+        errors.append(f"PROTOCOL.md documents unknown manifest field "
+                      f"{f!r} (absent from image_store.MANIFEST_FIELDS)")
+    section = text[text.index(anchor):]
+    section = section[:section.index("\n## ") if "\n## " in section[4:]
+                      else len(section)]
+    if f"MANIFEST_FORMAT = {MANIFEST_FORMAT}" not in section:
+        errors.append("PROTOCOL.md manifest section does not state the "
+                      f"current manifest format ({MANIFEST_FORMAT})")
+    return errors
+
+
 def check_example_flags() -> list:
     """README 'Example flags' table + example epilog vs the parser."""
     import multirank_simulation as sim
@@ -202,8 +235,9 @@ def check_architecture_linked() -> list:
 
 
 CHECKS = (check_protocol_op_table, check_frame_format_table,
-          check_image_container_fields, check_example_flags,
-          check_quickstart_in_readme, check_architecture_linked)
+          check_image_container_fields, check_manifest_fields,
+          check_example_flags, check_quickstart_in_readme,
+          check_architecture_linked)
 
 
 def main() -> int:

@@ -48,6 +48,7 @@ import random
 import sys
 import tempfile
 import time
+import warnings
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -117,6 +118,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--log-dir", default=None,
                    help="chaos mode: write attempt records, the failing "
                         "seed and the last image here (CI artifacts)")
+    p.add_argument("--store-dir", default=None,
+                   help="durable image store root: committed epochs are "
+                        "uploaded asynchronously as digest-protected "
+                        "manifests; chaos mode then runs the degraded-"
+                        "path arms (torn commit, seeded corruption of "
+                        "the newest epoch -> fallback restore)")
+    p.add_argument("--retain-epochs", type=int, default=2,
+                   help="point-in-time restore window: keep the last K "
+                        "committed epochs in the launcher collector AND "
+                        "the store (default 2)")
     # ---- deprecated spellings (kept working; see resolve_restore_flags)
     p.add_argument("--transport-a", default=None,
                    choices=available_transports(),
@@ -496,6 +507,75 @@ def chaos_schedule(seed, n, kills, target):
     return plans
 
 
+def open_chaos_store(args):
+    """The durable tier behind --store-dir (None without the flag)."""
+    if not args.store_dir:
+        return None
+    from repro.core.image_store import open_store
+    return open_store(args.store_dir, retain=args.retain_epochs)
+
+
+def run_store_arms(args, transports, n_restart, fn_factory, check):
+    """The degraded-path arms behind --store-dir, run AFTER the chaos
+    horizon so the store holds real committed epochs:
+
+    arm 1 (torn commit): a seeded `StoreCrash` kills the "launcher"
+    between blob upload and manifest commit — the manifest-last
+    protocol leaves NO visible epoch, so the restart simply ignores
+    the torn upload.
+
+    arm 2 (scrub -> fallback): a seeded single-bit flip corrupts the
+    newest epoch's blobs on disk; a COLD restart (launcher RAM gone,
+    image=None) falls back a generation with a typed
+    `EpochFallbackWarning` and still finishes the horizon."""
+    from repro.core.image_store import (EpochFallbackWarning, StoreCrash,
+                                        StoreFaults, open_store)
+    sd, retain = args.store_dir, args.retain_epochs
+    store = open_store(sd, retain=retain)
+    eps = store.epochs()
+    assert len(eps) >= 2, f"need >=2 retained epochs for fallback, got {eps}"
+
+    # --- arm 1: launcher dies between upload and manifest commit -----
+    torn = open_store(sd, retain=retain,
+                      faults=StoreFaults(args.seed).crash_before_manifest())
+    fake = dict(store.load(eps[-1]), epoch=eps[-1] + 1000)
+    try:
+        torn.commit(fake)
+        raise AssertionError("crash_before_manifest never fired")
+    except StoreCrash:
+        pass
+    assert open_store(sd, retain=retain).epochs() == eps, \
+        "torn commit must be invisible (manifest-last protocol)"
+    print(f">>> store arm 1: torn commit (crash before manifest) left "
+          f"epochs {eps} unchanged")
+
+    # --- arm 2: corrupt newest epoch, cold-restart from the store ----
+    man = store.manifest(eps[-1])
+    rng = random.Random(f"{args.seed}:store-flip")
+    for rec in man["blobs"].values():
+        path = os.path.join(sd, rec["key"])
+        raw = bytearray(open(path, "rb").read())
+        raw[rng.randrange(len(raw))] ^= 1 << rng.randrange(8)
+        with open(path, "wb") as f:
+            f.write(bytes(raw))
+    cold = open_store(sd, retain=retain)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        sup = run_world_supervised(
+            transports, n_restart, fn_factory, max_restarts=0,
+            store=cold, retain_epochs=retain, unblock_window=0.5,
+            timeout=300, async_ckpt=args.async_ckpt)
+    cold.stop()
+    assert any(issubclass(w.category, EpochFallbackWarning)
+               for w in caught), [w.category for w in caught]
+    assert sup.image is not None and sup.image["epoch"] == eps[-2], \
+        (sup.image and sup.image["epoch"], eps)
+    check(sup)
+    print(f">>> store arm 2: newest epoch {eps[-1]} corrupted (seeded "
+          f"bit flips) -> cold restart fell back to epoch {eps[-2]} "
+          f"with EpochFallbackWarning and finished the horizon")
+
+
 def chaos_main(args, transport, specs):
     n, seed, kills = args.ranks, args.seed, args.kills
     target, every = CHAOS_STEPS, CHAOS_CKPT_EVERY
@@ -518,13 +598,17 @@ def chaos_main(args, transport, specs):
                                  compress_level=args.compress_level)
 
     t0 = time.perf_counter()
+    store = open_chaos_store(args)
     print(f"=== {n}-rank CHAOS run: seed {seed}, {kills} injected kills, "
           f"checkpoint every {every} steps, transport(s) {transports}, "
-          f"{'async' if args.async_ckpt else 'sync'} checkpoints ===")
+          f"{'async' if args.async_ckpt else 'sync'} checkpoints"
+          + (f", store {args.store_dir} (retain "
+             f"{args.retain_epochs})" if store else "") + " ===")
     sup = run_world_supervised(
         transports, n, fn_factory, max_restarts=kills + 2,
         faults_for_attempt=lambda a: schedule.get(a, (None,))[0],
         unblock_window=0.5, timeout=300, log_dir=args.log_dir,
+        store=store, retain_epochs=args.retain_epochs,
         async_ckpt=args.async_ckpt)
 
     # every rank finished the horizon with the ring sequence intact
@@ -549,6 +633,26 @@ def chaos_main(args, transport, specs):
     print(f">>> chaos: survived {kills} kills in {sup.attempts} attempts; "
           f"resume steps {resume_steps}; recovery latencies "
           f"{[round(x, 3) for x in recoveries if x is not None]}s")
+    if store is not None:
+        store.stop()
+        print(f">>> store: retained epochs {store.epochs()}")
+
+        def arms_factory(attempt, image):
+            assert image is not None, "cold restart must adopt a store epoch"
+            resume = 1 + min(int(snap_state(b)["step"])
+                             for b in image["ranks"].values())
+            print(f">>> store cold restart: resume step {resume} "
+                  f"(image epoch {image['epoch']})")
+            return make_chaos_worker(n, image, target, every,
+                                     async_ckpt=args.async_ckpt,
+                                     compress_level=args.compress_level)
+
+        def check(sup2):
+            assert len(sup2.result.results) == n
+            assert all(v["step"] == target and v["recvd"] == target
+                       for v in sup2.result.results.values())
+
+        run_store_arms(args, transports, n, arms_factory, check)
     print(f"PASS ({time.perf_counter() - t0:.1f}s)")
 
 
@@ -687,14 +791,18 @@ def elastic_main(args, transport, specs):
                                    compress_level=args.compress_level)
 
     t0 = time.perf_counter()
+    store = open_chaos_store(args)
     print(f"=== ELASTIC chaos: {n0} ranks, kill {kills} -> resume at "
           f"{n1} -> grow back to {n0}; seed {seed}, transport(s) "
-          f"{transports} ===")
+          f"{transports}"
+          + (f", store {args.store_dir} (retain "
+             f"{args.retain_epochs})" if store else "") + " ===")
     sup = run_world_supervised(
         transports, n0, fn_factory, max_restarts=4, elastic=True,
         faults_for_attempt=lambda a: schedule.get(a),
         capacity_for_attempt=lambda a, rf: capacities.get(a),
         unblock_window=0.5, timeout=300, log_dir=args.log_dir,
+        store=store, retain_epochs=args.retain_epochs,
         async_ckpt=args.async_ckpt)
 
     assert sup.final_n == n0 and len(sup.result.results) == n0
@@ -719,6 +827,21 @@ def elastic_main(args, transport, specs):
           f"attempts; resume steps {resume_steps}; recovery latencies "
           f"{recoveries}s; final state bit-identical to the logical "
           f"arange + {target}")
+    if store is not None:
+        store.stop()
+        print(f">>> store: retained epochs {store.epochs()}")
+
+        # SHRINK-elastic fallback: the cold restart adopts the store
+        # epoch at whatever world size committed it and reshards down
+        # to the surviving n1 — the same fn_factory handles it
+        def check(sup2):
+            assert sup2.final_n == n1 and len(sup2.result.results) == n1
+            full = np.concatenate([np.asarray(sup2.result.results[r]["x"])
+                                   for r in range(n1)])
+            assert np.array_equal(full,
+                                  np.arange(G, dtype=np.float64) + target)
+
+        run_store_arms(args, transports, n1, fn_factory, check)
     print(f"PASS ({time.perf_counter() - t0:.1f}s)")
 
 
@@ -741,6 +864,8 @@ def main():
                          + "".join(f" --restore-to {n or ''}@{t}"
                                    for n, t in specs if t)
                          + (" --elastic" if args.elastic else "")
+                         + (f" --store-dir {args.store_dir}"
+                            if args.store_dir else "")
                          + (" --quick" if args.quick else ""))
                 with open(os.path.join(args.log_dir,
                                        "failing_seed.txt"), "w") as f:

@@ -14,10 +14,22 @@ THE way to restore a committed image — same world, different world size
 old-rank -> new-rank remapping and `WorldMismatchError` the typed
 failure for a mis-sized restore.  Everything here is importable from a
 jax-free process (socket rank children fork per restart attempt).
+
+Durable store surface (ISSUE 10): `repro.open_store(store_dir)` opens
+the durable tiered image store (`EpochStore` over a local-dir,
+object-store-shaped backend) that `run_world(store=...)` and
+`run_world_supervised(store=...)` upload committed epochs to and fall
+back on — `EpochFallbackWarning` is the typed signal that a corrupt
+epoch was skipped for an older retained generation.
 """
 from repro.core.codec import WorldMismatchError
+from repro.core.image_store import (EpochFallbackWarning, EpochStore,
+                                    ImageStore, LocalDirStore, StoreFaults,
+                                    open_store)
 from repro.core.restore import (RestorePlan, RestoredWorld,
                                 parse_restore_spec, restore_world)
 
-__all__ = ["RestorePlan", "RestoredWorld", "WorldMismatchError",
-           "parse_restore_spec", "restore_world"]
+__all__ = ["EpochFallbackWarning", "EpochStore", "ImageStore",
+           "LocalDirStore", "RestorePlan", "RestoredWorld", "StoreFaults",
+           "WorldMismatchError", "open_store", "parse_restore_spec",
+           "restore_world"]

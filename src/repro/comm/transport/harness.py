@@ -50,6 +50,7 @@ import os
 import pickle
 import time
 import traceback
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Union
 
 from repro.comm.transport.base import TAG_RESULT, Endpoint, TransportClosed
@@ -137,6 +138,7 @@ def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
               timeout: float = 300.0, faults: Optional[FaultPlan] = None,
               heartbeat_s: Optional[float] = None,
               async_ckpt: bool = False,
+              store=None, retain_epochs: int = 1,
               on_running: Optional[Callable[[CoordinatorServer], None]] = None,
               ) -> WorldResult:
     """Run `fn` on every rank of a fresh `transport` world and tear the
@@ -163,11 +165,11 @@ def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
     if transport == "inproc":
         return _run_inproc(n, fn, msg_cost_us, unblock_window, mode,
                            coll_algo, timeout, faults, heartbeat_s,
-                           async_ckpt, on_running)
+                           async_ckpt, store, retain_epochs, on_running)
     if transport == "socket":
         return _run_socket(n, fn, msg_cost_us, unblock_window, mode,
                            coll_algo, timeout, faults, heartbeat_s,
-                           async_ckpt, on_running)
+                           async_ckpt, store, retain_epochs, on_running)
     from repro.comm.transport import available_transports
     raise ValueError(f"unknown transport {transport!r}; "
                      f"registered: {available_transports()}")
@@ -179,13 +181,14 @@ def run_world(transport: str, n: int, fn: Callable[[WorldContext], Any], *,
 
 def _run_inproc(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
                 timeout, faults, heartbeat_s, async_ckpt,
-                on_running) -> WorldResult:
+                store, retain_epochs, on_running) -> WorldResult:
     import threading
 
     world = InprocTransport(n, msg_cost_us=msg_cost_us, fault_plan=faults)
     server, clients = make_control_plane(
         world, unblock_window=unblock_window,
-        heartbeat_timeout=None if heartbeat_s is None else 5 * heartbeat_s)
+        heartbeat_timeout=None if heartbeat_s is None else 5 * heartbeat_s,
+        store=store, retain_epochs=retain_epochs)
     results: Dict[int, Any] = {}
     errors: Dict[int, str] = {}
 
@@ -296,7 +299,7 @@ def _socket_child(rank, n, addr, fn, msg_cost_us, mode, coll_algo, faults,
 
 def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
                 timeout, faults, heartbeat_s, async_ckpt,
-                on_running) -> WorldResult:
+                store, retain_epochs, on_running) -> WorldResult:
     import multiprocessing
 
     try:
@@ -311,6 +314,7 @@ def _run_socket(n, fn, msg_cost_us, unblock_window, mode, coll_algo,
     server = CoordinatorServer(
         coord_tr.endpoint, n, unblock_window=unblock_window,
         heartbeat_timeout=None if heartbeat_s is None else 5 * heartbeat_s,
+        store=store, retain_epochs=retain_epochs,
     ).start()
     procs = [ctx.Process(target=_socket_child, daemon=True,
                          args=(r, n, switch.addr, fn, msg_cost_us, mode,
@@ -382,6 +386,21 @@ class SupervisedRun:
     final_n: int = 0                # world size of the successful attempt
 
 
+def _image_restorable(image: Dict) -> bool:
+    """Verify a committed image actually decodes: every binary snapshot
+    blob's chain walks and digests check (typed `ImageError` paths in
+    `repro.core.codec`).  JSON-safe app-dict blobs have nothing to
+    verify — they round-tripped through the container already."""
+    from repro.core.codec import ImageError, is_snap_blob, restore_rank_arrays
+    try:
+        for r, blob in image.get("ranks", {}).items():
+            if is_snap_blob(blob):
+                restore_rank_arrays(image, r)
+        return True
+    except (ImageError, KeyError, TypeError, ValueError):
+        return False
+
+
 def run_world_supervised(
         transports: Union[str, Sequence[str]], n: int,
         fn_factory: Callable[[int, Optional[Dict]], Callable],
@@ -392,6 +411,7 @@ def run_world_supervised(
         elastic: bool = False,
         capacity_for_attempt: Optional[Callable[[int, Optional[RankFailure]],
                                                 Optional[int]]] = None,
+        store=None, retain_epochs: int = 1,
         **run_kw) -> SupervisedRun:
     """Supervise a world through rank failures.
 
@@ -417,8 +437,18 @@ def run_world_supervised(
     automatically.
 
     On `RankFailure`: record it (to `log_dir` if given), adopt the
-    failure's committed image if it carries one, and relaunch.  Raises
-    the last `RankFailure` once `max_restarts` is exhausted.
+    failure's committed image if it carries one AND it verifies, and
+    relaunch.  Raises the last `RankFailure` once `max_restarts` is
+    exhausted.
+
+    DURABLE tier (`store=`, an `image_store.EpochStore`, ISSUE 10):
+    the coordinator uploads every committed epoch asynchronously, and
+    restore picks the newest VERIFIED epoch — a cold start (image=None,
+    e.g. a relaunch after the launcher itself died) adopts the newest
+    store epoch that passes digest verification, and a corrupt or torn
+    epoch falls back a generation with a typed `EpochFallbackWarning`
+    instead of failing the restart.  `retain_epochs` bounds both the
+    RAM collector and the store retention.
 
     A fault-free supervised run is one attempt:
 
@@ -433,6 +463,14 @@ def run_world_supervised(
     failures: List[Dict] = []
     if log_dir:
         os.makedirs(log_dir, exist_ok=True)
+    if image is None and store is not None:
+        # cold start with a durable tier: the launcher (or a previous
+        # incarnation of it) may have committed epochs before dying —
+        # adopt the newest VERIFIED one; corrupt/torn epochs fall back
+        # a generation (EpochFallbackWarning) inside the store
+        fallback = store.load_newest_verified()
+        if fallback is not None:
+            image = restore_world(fallback).image
     user_on_running = run_kw.pop("on_running", None)
     prev_detect = [0.0]   # monotonic time the previous failure was detected
 
@@ -467,6 +505,7 @@ def run_world_supervised(
         fn = fn_factory(attempt, image)
         try:
             res = run_world(transport, n_attempt, fn, faults=faults,
+                            store=store, retain_epochs=retain_epochs,
                             on_running=on_running, **run_kw)
             return SupervisedRun(res, attempt + 1, failures, transport,
                                  image, final_n=n_attempt)
@@ -477,10 +516,29 @@ def run_world_supervised(
                       "n": n_attempt, "failed_ranks": rf.ranks,
                       "image_epoch": None if rf.committed_image is None
                       else rf.committed_image["epoch"]}
-            if rf.committed_image is not None:
+            if rf.committed_image is not None and (
+                    store is None or _image_restorable(rf.committed_image)):
                 # normalize through the one public restore entrypoint
                 # (container round trip; see the docstring)
                 image = restore_world(rf.committed_image).image
+            elif store is not None and (rf.committed_image is not None
+                                        or image is None):
+                # the in-RAM image fails digest/chain verification (or
+                # nothing was committed this attempt and we hold no
+                # earlier image): fall back to the newest VERIFIED
+                # store epoch instead of failing the restart —
+                # graceful degradation a generation back
+                from repro.core.image_store import EpochFallbackWarning
+                if rf.committed_image is not None:
+                    warnings.warn(
+                        "committed image for epoch "
+                        f"{rf.committed_image.get('epoch')} failed "
+                        "verification; falling back to the image store",
+                        EpochFallbackWarning, stacklevel=2)
+                fallback = store.load_newest_verified()
+                if fallback is not None:
+                    image = restore_world(fallback).image
+                    record["image_epoch"] = fallback.get("epoch")
             if elastic:
                 # relaunch with the survivors; capacity_for_attempt may
                 # still grow the next attempt back
@@ -494,8 +552,15 @@ def run_world_supervised(
                                "partial_result_ranks":
                                    sorted(rf.partial_results)}, f, indent=1)
                 if image is not None:
-                    with open(os.path.join(log_dir, "last_image.bin"),
-                              "wb") as f:
+                    # atomic retire: write-to-tmp + fsync + rename so a
+                    # launcher crash mid-write can never leave a torn
+                    # image (same idiom as CheckpointManager._write)
+                    dst = os.path.join(log_dir, "last_image.bin")
+                    tmp = dst + ".tmp"
+                    with open(tmp, "wb") as f:
                         f.write(image_to_bytes(image))
+                        f.flush()
+                        os.fsync(f.fileno())
+                    os.replace(tmp, dst)
     assert last_failure is not None
     raise last_failure

